@@ -1,0 +1,50 @@
+"""Fig 3: normalized communication time, FedP2P (at optimal L) vs FedAvg,
+swept over sampled devices P, bandwidth ratio gamma, and asymmetry alpha —
+the paper's closed-form model instantiated exactly (§3.2 / §4.4), plus the
+TPU-pod instantiation from DESIGN.md §3."""
+from __future__ import annotations
+
+from repro.core.comm_model import (
+    CommParams, h_fedavg, min_h_fedp2p, optimal_L, speedup_R, tpu_comm_params,
+)
+
+MODEL_BYTES = 100e6          # 100 MB model (typical of the paper's regime)
+SERVER_BW = 1e9              # 1 Gb/s-ish server
+
+
+def run(quick: bool = True):
+    rows = []
+    Ps = [100, 500, 1000, 2000, 5000]
+    for alpha in (1, 4, 16):
+        for gamma in (50, 100, 500, 1000):
+            p = CommParams(MODEL_BYTES, SERVER_BW, SERVER_BW / gamma, alpha)
+            for P in Ps:
+                R = speedup_R(p, P)
+                rows.append((f"fig3/alpha{alpha}/gamma{gamma}/P{P}/speedup_R",
+                             R, f"L*={optimal_L(p, P):.1f};"
+                                f"Havg={h_fedavg(p, P):.1f}s;"
+                                f"Hp2p={min_h_fedp2p(p, P):.1f}s"))
+    # paper claim checks
+    p = CommParams(MODEL_BYTES, SERVER_BW, SERVER_BW / 100, 16)
+    rows.append(("fig3/claim/10x_regime", speedup_R(p, 5000),
+                 "paper: ~10x at large P"))
+    p_bad = CommParams(MODEL_BYTES, SERVER_BW, SERVER_BW / 2000, 1)
+    rows.append(("fig3/claim/fedavg_wins_small_P", speedup_R(p_bad, 50),
+                 "paper: FedAvg can win when P small / B_d poor (<1)"))
+    # TPU-pod instantiation: DCN 'server' link vs ICI device links
+    tpu = tpu_comm_params(3.1e9)     # qwen2-1.5b bf16 replica
+    for P in (16, 32, 256):
+        rows.append((f"fig3/tpu_pod/P{P}/speedup_R", speedup_R(tpu, P),
+                     f"L*={optimal_L(tpu, P):.1f}"))
+    return rows
+
+
+def main():
+    from benchmarks.common import print_rows
+    rows = run()
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

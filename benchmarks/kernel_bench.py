@@ -1,0 +1,59 @@
+"""Kernel microbench: us/call of the pure-jnp oracle paths on CPU (the
+Pallas kernels themselves are TPU-targeted; interpret mode timing is not
+meaningful, so we bench the oracles and verify kernels once)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels import ref
+from repro.kernels.fed_aggregate import fed_aggregate
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # fed_aggregate: aggregation of 16 client replicas of a 10M-param model
+    n, d = 16, (2_000_000 if quick else 10_000_000)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    w = jnp.ones((n,)) / n
+    f_ref = jax.jit(ref.fed_aggregate_ref)
+    rows.append((f"kernel/fed_aggregate_ref/{n}x{d}",
+                 timed(f_ref, x, w), "jnp oracle (XLA:CPU)"))
+    out_k = fed_aggregate(x[:, :4096], w, interpret=True)
+    ok = bool(jnp.allclose(out_k, ref.fed_aggregate_ref(x[:, :4096], w),
+                           rtol=1e-4))
+    rows.append(("kernel/fed_aggregate_pallas_interpret_match", float(ok),
+                 "1.0 = matches oracle"))
+
+    b, h, s, hd = 1, 4, (1024 if quick else 4096), 64
+    q = jax.random.normal(key, (b, h, s, hd)) * 0.5
+    k = jax.random.normal(key, (b, h, s, hd)) * 0.5
+    v = jax.random.normal(key, (b, h, s, hd)) * 0.5
+    f_fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    rows.append((f"kernel/flash_attention_ref/b{b}h{h}s{s}",
+                 timed(f_fa, q, k, v), "jnp oracle"))
+
+    bs, ss, hh, p, nn = 2, (512 if quick else 2048), 4, 64, 64
+    x2 = jax.random.normal(key, (bs, ss, hh, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(key, (bs, ss, hh)))
+    A = -jnp.exp(jax.random.normal(key, (hh,)) * 0.3)
+    B = jax.random.normal(key, (bs, ss, nn)) * 0.5
+    C = jax.random.normal(key, (bs, ss, nn)) * 0.5
+    from repro.models.ssm import ssd_chunked
+    f_ssd = jax.jit(lambda *a: ssd_chunked(*a, 128))
+    rows.append((f"kernel/ssd_chunked/b{bs}s{ss}",
+                 timed(f_ssd, x2, dt, A, B, C), "chunked jnp (kernel oracle)"))
+    return rows
+
+
+def main():
+    from benchmarks.common import print_rows
+    rows = run()
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

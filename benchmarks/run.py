@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure (+roofline/kernels).
+
+Prints ``name,value,derived`` CSV per row. ``--full`` runs the paper-scale
+configurations (slower); default is the quick CI-sized pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (e.g. accuracy,roofline)")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (accuracy, comm_time, kernel_bench, lq_sweep,
+                            roofline, stragglers, theory_bound, topology_gain)
+    modules = {
+        "accuracy": lambda: accuracy.run(quick=quick)[0],   # Table 1 + Fig 2
+        "comm_time": lambda: comm_time.run(quick=quick),    # Fig 3
+        "stragglers": lambda: stragglers.run(quick=quick),  # Fig 4
+        "lq_sweep": lambda: lq_sweep.run(quick=quick),      # Fig 5
+        "theory_bound": lambda: theory_bound.run(quick=quick),  # §3.3
+        "topology_gain": lambda: topology_gain.run(quick=quick),  # §5
+        "kernels": lambda: kernel_bench.run(quick=quick),
+        "roofline": lambda: roofline.run(quick=quick),      # deliverable (g)
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,value,derived")
+    failures = []
+    for name, fn in modules.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row_name, val, derived in fn():
+                print(f"{row_name},{val:.6g},{derived}")
+            print(f"_meta/{name}/seconds,{time.time()-t0:.1f},")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"_meta/{name}/FAILED,0,{e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+from repro.launch.dryrun import dryrun_one
+from repro.configs import ARCH_IDS
+
+for fname, multi in (("results/dryrun_single.json", False),
+                     ("results/dryrun_multi.json", True)):
+    rows = json.load(open(fname))
+    for i, r in enumerate(rows):
+        if r.get("shape") == "long_500k":
+            rows[i] = dryrun_one(r["arch"], "long_500k", multi_pod=multi)
+    json.dump(rows, open(fname, "w"), indent=1)
+    print("patched", fname)

@@ -1,0 +1,40 @@
+"""Render EXPERIMENTS.md roofline tables from the dry-run JSON artifacts."""
+import json
+import os
+import sys
+
+
+def fmt(rows, title):
+    out = [f"### {title}", "",
+           "| arch | shape | strat | mem/dev | fits | compute s | memory s | "
+           "collective s | dominant | useful | top collectives |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — "
+                       f"| FAILED | — | {r.get('error', '')[:40]} |")
+            continue
+        cb = r.get("coll_breakdown", {})
+        top = ",".join(f"{k}:{v/2**30:.1f}G" for k, v in
+                       sorted(cb.items(), key=lambda kv: -kv[1])[:2] if v)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['strategy']} | "
+            f"{r['peak_mem_per_device_gib']:.2f} GiB | "
+            f"{'Y' if r['peak_mem_per_device_gib'] <= 16 else 'N'} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | **{r['dominant']}** | "
+            f"{r['useful_flops_ratio']:.2f} | {top} |")
+    return "\n".join(out) + "\n"
+
+
+def main():
+    for f, title in (("results/dryrun_single.json", "Single-pod (16x16 = 256 chips)"),
+                     ("results/dryrun_multi.json", "Multi-pod (2x16x16 = 512 chips)"),
+                     ("results/dryrun_fedp2p_single.json", "FedP2P round (paper protocol) — single-pod"),
+                     ("results/dryrun_fedp2p_multi.json", "FedP2P round — multi-pod")):
+        if os.path.exists(f):
+            print(fmt(json.load(open(f)), title))
+
+
+if __name__ == "__main__":
+    main()

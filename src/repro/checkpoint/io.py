@@ -1,0 +1,84 @@
+"""Pytree checkpointing: flattened-leaf ``.npz`` + JSON treedef/metadata.
+
+No orbax in this container; this is a dependency-free implementation with
+atomic writes and step-based retention, sufficient for single-host drivers
+(multi-host would swap in a sharded writer behind the same API).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    metadata: Optional[Dict] = None, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays, dtypes = {}, []
+    for i, (_, v) in enumerate(leaves_with_paths):
+        a = np.asarray(v)
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = a.view(np.uint16)            # npz can't store ml_dtypes
+        arrays[f"leaf_{i}"] = a
+    names = [_key_str(p) for p, _ in leaves_with_paths]
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    meta = {"step": step, "names": names, "dtypes": dtypes,
+            "metadata": metadata or {}}
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **arrays)
+    os.replace(tmp, path)
+    _retain(ckpt_dir, keep)
+    return path
+
+
+def _retain(ckpt_dir: str, keep: int) -> None:
+    ckpts = sorted(f for f in os.listdir(ckpt_dir)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(ckpt_dir, old))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, tree_like: Any,
+                    step: Optional[int] = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        leaves = []
+        for i, dt in enumerate(meta.get("dtypes",
+                                        [None] * len(meta["names"]))):
+            a = z[f"leaf_{i}"]
+            if dt == "bfloat16":
+                import ml_dtypes
+                a = a.view(ml_dtypes.bfloat16)
+            leaves.append(a)
+    ref_leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(ref_leaves) == len(leaves), "checkpoint/model structure mismatch"
+    out = treedef.unflatten([np.asarray(l) for l in leaves])
+    return out, meta

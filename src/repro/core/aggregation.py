@@ -1,0 +1,90 @@
+"""Model aggregation — the paper's ``Aggregate(·)`` operator.
+
+``weighted_average`` is the Algo-1/Algo-2 primitive:
+    theta <- sum_i gamma_i theta_i,   gamma_i = |D_i| / sum |D_i|
+operating on a stacked pytree (leaves have a leading client axis).
+
+``cluster_then_global`` is FedP2P's two-stage version: data-weighted within
+each cluster, then UNWEIGHTED mean over clusters (§3.1 step 3) — the
+difference from FedAvg that drives the paper's accuracy/smoothness results.
+
+The flattened weighted reduction is the compute hot-spot of the protocol at
+production model sizes; ``kernels/fed_aggregate.py`` provides the Pallas TPU
+kernel for it, and these functions are its pure-jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _normalize(weights: jnp.ndarray, mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    total = jnp.sum(w)
+    # all-dropped guard: fall back to uniform over mask (or all clients)
+    safe = jnp.where(total > 0, w / jnp.maximum(total, 1e-12),
+                     jnp.ones_like(w) / w.shape[0])
+    return safe
+
+
+def weighted_average(stacked_params, weights: jnp.ndarray,
+                     mask: Optional[jnp.ndarray] = None):
+    """stacked_params: pytree, leaves [N, ...]; weights [N] (|D_i| counts);
+    mask [N] 0/1 straggler survival. Returns pytree without the N axis."""
+    w = _normalize(weights, mask)
+
+    def reduce_leaf(leaf):
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(reduce_leaf, stacked_params)
+
+
+def cluster_then_global(stacked_params, weights: jnp.ndarray,
+                        cluster_ids: jnp.ndarray, num_clusters: int,
+                        mask: Optional[jnp.ndarray] = None):
+    """FedP2P two-stage aggregation.
+
+    stacked_params leaves [N, ...]; weights [N]; cluster_ids [N] in [0, L);
+    mask [N]. Within cluster l: theta_l = sum_i gamma_i theta_i with
+    gamma_i = w_i / sum_{j in l} w_j. Globally: mean over non-empty clusters.
+    """
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    onehot = jax.nn.one_hot(cluster_ids, num_clusters, dtype=jnp.float32)  # [N,L]
+    cluster_tot = onehot.T @ w                                             # [L]
+    live = (cluster_tot > 0).astype(jnp.float32)                           # [L]
+    n_live = jnp.maximum(jnp.sum(live), 1.0)
+    # per-client coefficient: (w_i / cluster_tot_{c(i)}) * (1 / n_live) if live
+    denom = jnp.maximum(cluster_tot, 1e-12)
+    coef = w * (onehot @ (live / denom)) / n_live                          # [N]
+
+    def reduce_leaf(leaf):
+        cf = coef.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * cf, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(reduce_leaf, stacked_params)
+
+
+def cluster_models(stacked_params, weights: jnp.ndarray,
+                   cluster_ids: jnp.ndarray, num_clusters: int,
+                   mask: Optional[jnp.ndarray] = None):
+    """Per-cluster weighted averages (the theta_{Z_l}); leaves [L, ...]."""
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    onehot = jax.nn.one_hot(cluster_ids, num_clusters, dtype=jnp.float32)
+    cluster_tot = jnp.maximum(onehot.T @ w, 1e-12)                         # [L]
+    coef = onehot * (w[:, None] / cluster_tot[None, :])                    # [N,L]
+
+    def reduce_leaf(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        out = coef.T @ flat                                                # [L,prod]
+        return out.reshape((num_clusters,) + leaf.shape[1:]).astype(leaf.dtype)
+
+    return jax.tree.map(reduce_leaf, stacked_params)

@@ -1,0 +1,85 @@
+"""Analytic communication-cost model (paper §3.2, Fig. 3).
+
+  H_avg  = (1 + alpha) M P / B_s
+  H_p2p  = (1 + alpha) L M / B_s  +  P M / (L B_d)  +  2 M / B_d
+  L*     = A sqrt(P),  A = sqrt(B_s / ((1 + alpha) B_d))
+  min H_p2p = (2 M / B_d) (P / L* + 1)
+  R      = H_avg / min H_p2p = (1+alpha) P / (2 sqrt(gamma (1+alpha) P) + 2 gamma)
+
+where M = model bytes, P = sampled devices/round, B_s = server uplink
+bandwidth, B_d = device-device bandwidth, alpha = server down/up asymmetry,
+gamma = B_s / B_d.
+
+Everything is plain float math (also usable inside jit). A TPU-pod
+instantiation (`tpu_comm_params`) maps the same model onto ICI/DCN numbers —
+the hierarchy-matched-communication reading of the paper used by our
+distributed runtime (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CommParams:
+    model_bytes: float            # M
+    server_bw: float              # B_s  (bytes/s)
+    device_bw: float              # B_d  (bytes/s)
+    alpha: float = 1.0            # downlink/uplink asymmetry (>= 1)
+
+    @property
+    def gamma(self) -> float:
+        return self.server_bw / self.device_bw
+
+
+def h_fedavg(p: CommParams, P: int) -> float:
+    """Communication time of one FedAvg round with P sampled devices."""
+    return (1.0 + p.alpha) * p.model_bytes * P / p.server_bw
+
+
+def h_fedp2p(p: CommParams, P: int, L: int) -> float:
+    """Communication time of one FedP2P round with L local P2P networks."""
+    return ((1.0 + p.alpha) * L * p.model_bytes / p.server_bw
+            + P * p.model_bytes / (L * p.device_bw)
+            + 2.0 * p.model_bytes / p.device_bw)
+
+
+def optimal_L(p: CommParams, P: int) -> float:
+    """L* = A sqrt(P), A = sqrt(B_s / ((1+alpha) B_d)) — continuous optimum."""
+    A = math.sqrt(p.server_bw / ((1.0 + p.alpha) * p.device_bw))
+    return A * math.sqrt(P)
+
+
+def min_h_fedp2p(p: CommParams, P: int) -> float:
+    """min_L H_p2p = (2M/B_d)(P/L* + 1)."""
+    L = optimal_L(p, P)
+    return (2.0 * p.model_bytes / p.device_bw) * (P / L + 1.0)
+
+
+def speedup_R(p: CommParams, P: int) -> float:
+    """Eq. (2): R = (1+a)P / (2 sqrt(gamma (1+a) P) + 2 gamma)."""
+    a, g = p.alpha, p.gamma
+    return (1.0 + a) * P / (2.0 * math.sqrt(g * (1.0 + a) * P) + 2.0 * g)
+
+
+def allreduce_time(model_bytes: float, n: int, bw: float) -> float:
+    """Ring allreduce: 2 (n-1)/n * M / bw (paper §3.2 footnote)."""
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * model_bytes / bw
+
+
+# ---------------------------------------------------------------------------
+# TPU-pod instantiation (hardware-adaptation reading; v5e constants)
+# ---------------------------------------------------------------------------
+
+V5E_ICI_BW = 50e9          # bytes/s per link (intra-pod, device-device)
+V5E_DCN_BW = 6.25e9        # bytes/s per host cross-pod (coordinator path)
+
+
+def tpu_comm_params(model_bytes: float, alpha: float = 1.0) -> CommParams:
+    """Map the paper's (B_s, B_d) onto a pod: the 'server' link is the
+    cross-pod DCN path, the 'device-device' link is intra-pod ICI."""
+    return CommParams(model_bytes=model_bytes, server_bw=V5E_DCN_BW,
+                      device_bw=V5E_ICI_BW, alpha=alpha)

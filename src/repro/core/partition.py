@@ -1,0 +1,49 @@
+"""Cluster formation — phase 1 of every FedP2P round (§3.1).
+
+``random_partition`` implements the paper's random repartition-per-round
+(jit-friendly). ``topology_partition`` implements the §5 extension: by the
+principle of deferred decisions, any data-independent assignment is
+distributionally identical to the random one, so we are free to group by hop
+distance for communication efficiency.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology, grid_cluster_assignment
+
+
+def random_partition(key, num_clients: int, num_clusters: int,
+                     devices_per_cluster: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample L*Q distinct clients and assign Q to each of L clusters.
+
+    Returns (selected [L*Q] client indices, cluster_ids [L*Q]).
+    """
+    L, Q = num_clusters, devices_per_cluster
+    perm = jax.random.permutation(key, num_clients)
+    selected = perm[: L * Q]
+    cluster_ids = jnp.repeat(jnp.arange(L, dtype=jnp.int32), Q)
+    return selected, cluster_ids
+
+
+def sample_participants(key, num_clients: int, participation: int) -> jnp.ndarray:
+    """FedAvg client sampling (|Z| = participation)."""
+    return jax.random.permutation(key, num_clients)[:participation]
+
+
+def topology_partition(key, topo: Topology, num_clusters: int,
+                       devices_per_cluster: int) -> Tuple[np.ndarray, np.ndarray]:
+    """§5 topology-aware variant (host-side, numpy): sample L*Q devices
+    uniformly, then cut into clusters along the region space so intra-cluster
+    hop counts are small."""
+    n = topo.hops.shape[0]
+    L, Q = num_clusters, devices_per_cluster
+    seed = int(jax.random.randint(key, (), 0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    selected = rng.permutation(n)[: L * Q]
+    ids = grid_cluster_assignment(topo, selected, L)
+    return selected, ids

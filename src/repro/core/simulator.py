@@ -1,0 +1,201 @@
+"""Protocol simulation engine — the paper-faithful reproduction layer.
+
+Runs N clients with the paper's own model classes (§4.2) on CPU. Client-local
+SGD (E epochs, batch O, lr eta) is ``vmap``-ed over all participants of a
+round; aggregation is the exact Algo-1 (FedAvg) / Algo-2 (FedP2P) operator
+from ``core.aggregation``. Everything inside a round is one jitted program.
+
+This layer produces the paper's Table 1 / Figs 2, 4, 5 analogues
+(see benchmarks/).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig
+from repro.configs.paper_models import PaperNetConfig
+from repro.core.aggregation import cluster_models, cluster_then_global, weighted_average
+from repro.core.partition import random_partition, sample_participants
+from repro.core.straggler import straggler_mask
+from repro.data.federated import FederatedDataset
+from repro.models.paper_nets import (
+    init_paper_net, paper_net_accuracy, paper_net_loss,
+)
+
+
+# ---------------------------------------------------------------------------
+# Client-local training (vmapped)
+# ---------------------------------------------------------------------------
+
+def make_local_trainer(net: PaperNetConfig, fl: FLConfig):
+    """Returns f(params, cx, cy, cmask, key) -> (params', mean_loss) for ONE
+    client; callers vmap it over participants."""
+    O = fl.batch_size
+
+    def local_train(params, cx, cy, cmask, key):
+        n_max = cy.shape[0]
+        steps = max(1, -(-n_max // O))               # ceil
+
+        def epoch(carry, ekey):
+            params, loss_sum, cnt = carry
+            perm = jax.random.permutation(ekey, n_max)
+
+            def step(carry, s):
+                params, loss_sum, cnt = carry
+                idx = jnp.take(perm, (jnp.arange(O) + s * O) % n_max)
+                batch = {"x": cx[idx], "y": cy[idx], "mask": cmask[idx]}
+                loss, grads = jax.value_and_grad(paper_net_loss)(params, batch, net)
+                params = jax.tree.map(
+                    lambda p, g: p - fl.lr * g.astype(p.dtype), params, grads)
+                return (params, loss_sum + loss, cnt + 1), None
+
+            (params, loss_sum, cnt), _ = jax.lax.scan(
+                step, (params, loss_sum, cnt), jnp.arange(steps))
+            return (params, loss_sum, cnt), None
+
+        ekeys = jax.random.split(key, fl.local_epochs)
+        (params, loss_sum, cnt), _ = jax.lax.scan(
+            epoch, (params, jnp.zeros(()), jnp.zeros(())), ekeys)
+        return params, loss_sum / jnp.maximum(cnt, 1.0)
+
+    return local_train
+
+
+# ---------------------------------------------------------------------------
+# Rounds
+# ---------------------------------------------------------------------------
+
+def _gather_clients(data_dev, sel):
+    return (jnp.take(data_dev["x"], sel, axis=0),
+            jnp.take(data_dev["y"], sel, axis=0),
+            jnp.take(data_dev["mask"], sel, axis=0),
+            jnp.take(data_dev["counts"], sel, axis=0))
+
+
+def make_round_fns(net: PaperNetConfig, fl: FLConfig, data_dev: Dict):
+    local_train = make_local_trainer(net, fl)
+    vtrain = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))
+    vtrain_per = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0))
+
+    @jax.jit
+    def fedavg_round(params, key):
+        k_sel, k_tr, k_str = jax.random.split(key, 3)
+        P = fl.participation
+        sel = sample_participants(k_sel, fl.num_clients, P)
+        cx, cy, cm, counts = _gather_clients(data_dev, sel)
+        trained, losses = vtrain(params, cx, cy, cm,
+                                 jax.random.split(k_tr, P))
+        smask = straggler_mask(k_str, P, fl.straggler_rate)
+        new_params = weighted_average(trained, counts, smask)
+        return new_params, jnp.mean(losses)
+
+    @jax.jit
+    def fedp2p_round(params, key):
+        """One global round: partition into L P2P networks, train, Allreduce
+        within clusters (possibly several p2p sub-rounds), global average."""
+        k_sel, k_tr, k_str = jax.random.split(key, 3)
+        L, Q = fl.num_clusters, fl.devices_per_cluster
+        sel, cids = random_partition(k_sel, fl.num_clients, L, Q)
+        cx, cy, cm, counts = _gather_clients(data_dev, sel)
+        smask = straggler_mask(k_str, L * Q, fl.straggler_rate)
+
+        # paper's fair comparison: one round of training inside each P2P
+        # network per global round (sync_period>1 adds extra local rounds).
+        client_params = None
+        losses = jnp.zeros(())
+        for r in range(max(1, fl.sync_period)):
+            kr = jax.random.fold_in(k_tr, r)
+            keys = jax.random.split(kr, L * Q)
+            if client_params is None:
+                client_params, losses = vtrain(params, cx, cy, cm, keys)
+            else:
+                cm_models = cluster_models(client_params, counts, cids, L, smask)
+                start = jax.tree.map(lambda p: jnp.take(p, cids, axis=0), cm_models)
+                client_params, losses = vtrain_per(start, cx, cy, cm, keys)
+        new_params = cluster_then_global(client_params, counts, cids, L, smask)
+        return new_params, jnp.mean(losses)
+
+    return fedavg_round, fedp2p_round
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def make_evaluator(net: PaperNetConfig, data_dev: Dict):
+    def eval_one(params, tx, ty, tm):
+        acc = paper_net_accuracy(params, {"x": tx, "y": ty, "mask": tm}, net)
+        return acc, jnp.sum(tm)
+
+    veval = jax.vmap(eval_one, in_axes=(None, 0, 0, 0))
+
+    @jax.jit
+    def evaluate(params):
+        accs, ns = veval(params, data_dev["test_x"], data_dev["test_y"],
+                         data_dev["test_mask"])
+        sample_weighted = jnp.sum(accs * ns) / jnp.maximum(jnp.sum(ns), 1.0)
+        client_mean = jnp.mean(accs)
+        return sample_weighted, client_mean
+
+    return evaluate
+
+
+# ---------------------------------------------------------------------------
+# Simulator facade
+# ---------------------------------------------------------------------------
+
+@dataclass
+class History:
+    acc: List[float] = field(default_factory=list)
+    acc_client_mean: List[float] = field(default_factory=list)
+    train_loss: List[float] = field(default_factory=list)
+
+    @property
+    def best_acc(self) -> float:
+        return max(self.acc) if self.acc else 0.0
+
+
+class Simulator:
+    def __init__(self, net: PaperNetConfig, data: FederatedDataset, fl: FLConfig):
+        self.net, self.fl = net, fl
+        self.data_dev = {
+            "x": jnp.asarray(data.x), "y": jnp.asarray(data.y),
+            "mask": jnp.asarray(data.mask),
+            "counts": jnp.asarray(data.counts, jnp.float32),
+            "test_x": jnp.asarray(data.test_x), "test_y": jnp.asarray(data.test_y),
+            "test_mask": jnp.asarray(data.test_mask),
+        }
+        if net.kind == "cnn" and self.data_dev["x"].ndim == 3:
+            pass
+        self.fedavg_round, self.fedp2p_round = make_round_fns(net, fl, self.data_dev)
+        self.evaluate = make_evaluator(net, self.data_dev)
+
+    def init_params(self, seed: int = 0):
+        return init_paper_net(jax.random.PRNGKey(seed), self.net)
+
+    def run(self, rounds: int = 0, algorithm: str = "", seed: int = 0,
+            eval_every: int = 1, verbose: bool = False) -> History:
+        rounds = rounds or self.fl.rounds
+        algorithm = algorithm or self.fl.algorithm
+        round_fn = self.fedp2p_round if algorithm == "fedp2p" else self.fedavg_round
+        params = self.init_params(seed)
+        key = jax.random.PRNGKey(seed + 1)
+        hist = History()
+        for t in range(rounds):
+            key, kr = jax.random.split(key)
+            params, loss = round_fn(params, kr)
+            if (t + 1) % eval_every == 0 or t == rounds - 1:
+                acc_w, acc_m = self.evaluate(params)
+                hist.acc.append(float(acc_w))
+                hist.acc_client_mean.append(float(acc_m))
+                hist.train_loss.append(float(loss))
+                if verbose:
+                    print(f"  [{algorithm}] round {t+1:4d} "
+                          f"acc={float(acc_w):.4f} loss={float(loss):.4f}")
+        return hist

@@ -1,0 +1,15 @@
+"""Straggler simulation (§4.5): each selected device independently fails to
+report with probability ``rate``. Aggregation renormalizes over survivors —
+semantically "the device's update never arrived"."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def straggler_mask(key, num_selected: int, rate: float) -> jnp.ndarray:
+    """[num_selected] float mask, 1 = survived. rate == 0 -> all ones."""
+    if rate <= 0.0:
+        return jnp.ones((num_selected,), jnp.float32)
+    survive = jax.random.bernoulli(key, 1.0 - rate, (num_selected,))
+    return survive.astype(jnp.float32)

@@ -1,0 +1,44 @@
+"""Host-side feed: stream numpy batches onto the mesh with the launcher's
+shardings (single-host multi-device; a multi-host deployment would swap the
+device_put for per-host shard placement behind the same iterator API)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.sharding.rules import MeshInfo, batch_dims
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, info: MeshInfo):
+    """NamedSharding pytree for a host batch (tokens/labels/embeds...)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    bax = batch_dims(info, shape.global_batch, shape.mode, cfg.vocab_size)
+    b = bax if len(bax) > 1 else (bax[0] if bax else None)
+
+    def spec_for(leaf: np.ndarray):
+        return NamedSharding(info.mesh, P(b, *([None] * (leaf.ndim - 1))))
+
+    return spec_for
+
+
+def sharded_batches(host_iter: Iterator[Dict[str, np.ndarray]],
+                    cfg: ModelConfig, shape: ShapeConfig,
+                    info: Optional[MeshInfo],
+                    prefetch: int = 2) -> Iterator[Dict]:
+    """Wrap a host batch iterator: device_put with the production shardings
+    and keep ``prefetch`` batches in flight (overlaps host generation with
+    device compute)."""
+    if info is None:
+        yield from host_iter
+        return
+    spec_for = batch_shardings(cfg, shape, info)
+    pending = []
+    for batch in host_iter:
+        placed = {k: jax.device_put(v, spec_for(v)) for k, v in batch.items()}
+        pending.append(placed)
+        if len(pending) > prefetch:
+            yield pending.pop(0)
+    yield from pending

@@ -1,0 +1,102 @@
+"""Pallas TPU flash-attention forward (causal / sliding-window, GQA-aware).
+
+Grid (B, Hq, Sq/bq, Tk/bk); the kv dimension is the minor (sequential) grid
+axis so the online-softmax running state (m, l, acc) lives in VMEM scratch
+persisted across kv steps — the canonical TPU flash pattern. GQA is handled
+in the k/v BlockSpec index maps (query head h reads kv head h // G), so kv
+tiles are fetched once per group from HBM.
+
+Block sizes default to (bq, bk) = (512, 512): q/k/v tiles of 512x128 bf16 =
+128 KB each — comfortably VMEM-resident, MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, window: int, bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)               # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)               # [bk, hd]
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    window: int = 0, bq: int = 512, bk: int = 512,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Hq, Sq, hd]; k, v: [B, Hkv, Tk, hd] -> [B, Hq, Sq, hd].
+
+    Causal; optional sliding window. Hq must be a multiple of Hkv.
+    """
+    b, hq, sq, hd = q.shape
+    _, hkv, tk, _ = k.shape
+    g = hq // hkv
+    bq = min(bq, sq)
+    bk = min(bk, tk)
+    assert sq % bq == 0 and tk % bk == 0, (sq, bq, tk, bk)
+    nq, nk = sq // bq, tk // bk
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_flash_kernel, scale=scale, window=window,
+                               bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, hd), q.dtype),
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h, iq, ik: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h, iq, ik: (b_, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

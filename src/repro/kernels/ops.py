@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Mosaic kernels run natively (``interpret=False``); on CPU (this
+container, and the multi-pod dry-run which lowers the XLA path) the wrappers
+either run the kernels in interpret mode (tests) or fall back to the jnp
+reference (production code paths choose explicitly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fed_aggregate import fed_aggregate as _fed_aggregate_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fed_aggregate(x, w, *, use_pallas: bool | None = None, interpret: bool | None = None):
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.fed_aggregate_ref(x, w)
+    return _fed_aggregate_pallas(x, w, interpret=not on_tpu() if interpret is None else interpret)
+
+
+def fed_aggregate_tree(stacked_params, w, *, use_pallas: bool | None = None):
+    """Aggregate a stacked pytree (leaves [N, ...]) via the flat kernel."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_params)
+    n = leaves[0].shape[0]
+    sizes = [int(l[0].size) for l in leaves]
+    flat = jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
+    out = fed_aggregate(flat, w, use_pallas=use_pallas)
+    outs, off = [], 0
+    for l, sz in zip(leaves, sizes):
+        outs.append(out[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def flash_attention(q, k, v, *, window: int = 0,
+                    use_pallas: bool | None = None,
+                    interpret: bool | None = None):
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.flash_attention_ref(q, k, v, window=window)
+    return _flash_pallas(q, k, v, window=window,
+                         interpret=not on_tpu() if interpret is None else interpret)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256,
+             use_pallas: bool | None = None,
+             interpret: bool | None = None):
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.ssd_scan_ref(x, dt, A, B, C)
+    return _ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                       interpret=not on_tpu() if interpret is None else interpret)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These intentionally re-derive the math independently (dense forms) rather
+than re-using the blocked model-code paths, so kernel tests pin both the
+kernels AND the blocked jnp implementations to one dense reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fed_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: [N, D]; w: [N] -> [D] (f32 accumulate, cast back)."""
+    out = jnp.einsum("n,nd->d", w.astype(jnp.float32), x.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0) -> jnp.ndarray:
+    """q: [B,Hq,Sq,hd]; k, v: [B,Hkv,Tk,hd] -> [B,Hq,Sq,hd]. Dense softmax."""
+    b, hq, sq, hd = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * hd ** -0.5
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(tk)[None, :]
+    mask = kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Naive sequential SSD recurrence (the ground truth both the chunked jnp
+    path and the Pallas kernel must match).
+    x [b,S,h,p], dt [b,S,h], A [h], B/C [b,S,n] -> (y, final_state)."""
+    b, S, h, p = x.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                       # [b,h,p], [b,h], [b,n], [b,n]
+        decay = jnp.exp(dtt * A[None, :])           # [b,h]
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0),
+          jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(B.astype(f32), 1, 0),
+          jnp.moveaxis(C.astype(f32), 1, 0))
+    state0 = jnp.zeros((b, h, p, n), f32)
+    final, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

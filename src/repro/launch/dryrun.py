@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax-importing import: jax locks the device count at init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) entry point
+against the production mesh and extract memory/cost/collective analyses.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi --out out.json
+
+Exit code != 0 if any combination fails to lower/compile — failures here are
+sharding bugs in the framework, per the brief.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.config import TrainConfig
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.configs.shapes import SHAPES
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, params_sds
+from repro.launch.steps import entry_point
+from repro.models.model import build_model
+from repro.sharding.rules import make_mesh_info
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, train_overrides=None):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = make_mesh_info(cfg, mesh)
+    model = build_model(cfg)
+    # tp archs: 4-way gradient accumulation; small-vocab seqtp/dp archs
+    # train with the model axis folded into data parallelism (256-way) ->
+    # no microbatching needed for memory (§Perf iteration 2/2b).
+    from repro.sharding.rules import batch_dims
+    pure_dp = len(batch_dims(info, shape.global_batch, shape.mode,
+                             cfg.vocab_size)) > len(info.dp_axes)
+    default_mb = 1 if pure_dp else 4
+    tc = train_overrides or TrainConfig(microbatches=default_mb)
+
+    t0 = time.time()
+    kwargs = input_specs(cfg, shape, info, model)
+    # weight-stationary decode pays when the decode batch saturates the data
+    # axis; at batch 1 (long_500k) the ZeRO layout is comm-free already.
+    p_mode = "decode" if (shape.mode == "decode"
+                          and shape.global_batch >= 16) else "train"
+    p_sds = params_sds(model, info, mode=p_mode)
+    step = entry_point(model, shape.mode, tc, info, shape.global_batch)
+
+    if shape.mode == "train":
+        from repro.optim import make_optimizer
+        opt = make_optimizer(tc)
+        o_sds = jax.eval_shape(opt.init, p_sds)
+        # optimizer-state shardings follow the parameter shardings
+        o_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=_opt_sharding(s, p_sds, info)), o_sds)
+        args = (p_sds, o_sds, kwargs["batch"])
+    elif shape.mode == "prefill":
+        args = (p_sds, kwargs["batch"], kwargs["cache"])
+    else:
+        args = (p_sds, kwargs["cache"], kwargs["batch"])
+
+    flops_g, bytes_g = rl.program_cost(step, *args)
+    # donate params/opt-state (train) or cache (decode): in/out buffers alias
+    donate = {"train": (0, 1), "prefill": (2,), "decode": (1,)}[shape.mode]
+    lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    report = rl.analyze(
+        compiled, arch=arch, shape=shape_name,
+        mesh_name="multi" if multi_pod else "single",
+        chips=mesh.devices.size, cfg=cfg, params_sds=p_sds, tokens=tokens,
+        mode=shape.mode, strategy=info.strategy,
+        flops_global=flops_g, bytes_global=bytes_g)
+    mem = compiled.memory_analysis()
+    result = report.to_dict()
+    result.update({
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "arg_bytes_per_device": float(getattr(mem, "argument_size_in_bytes", 0)),
+        "temp_bytes_per_device": float(getattr(mem, "temp_size_in_bytes", 0)),
+        "ok": True,
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} x {result['mesh']}] "
+              f"strategy={info.strategy} "
+              f"mem={result['peak_mem_per_device_gib']:.2f}GiB/dev "
+              f"compute={report.compute_s:.4f}s memory={report.memory_s:.4f}s "
+              f"coll={report.collective_s:.4f}s dom={report.dominant} "
+              f"useful={report.useful_flops_ratio:.2f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return result
+
+
+def dryrun_fedp2p(arch: str, *, multi_pod: bool = False, local_steps: int = 4,
+                  client_batch: int = 2, seq_len: int = 4096,
+                  num_clusters: int = 4, verbose: bool = True):
+    """Lower + compile the PAPER'S protocol (core/fedp2p.py) on the
+    production mesh: one client group per data-axis slice, L clusters,
+    grouped intra-cluster allreduce + global sync. This is the
+    paper-representative entry in the roofline study."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.config import FLConfig
+    from repro.core.fedp2p import make_federated_round
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = make_mesh_info(cfg, mesh)
+    model = build_model(cfg)
+    D = info.dp_size
+    fl = FLConfig(num_clusters=num_clusters, lr=0.01)
+
+    dp = info.dp_axes
+    dspec = dp if len(dp) > 1 else dp[0]
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    import jax.numpy as jnp
+    p_shapes = jax.eval_shape(lambda k: model.init(k, dtype=jnp.bfloat16),
+                              jax.random.key(0))
+    f_params = jax.tree.map(
+        lambda s: sds((D,) + s.shape, s.dtype,
+                      P(*((dspec,) + (None,) * len(s.shape)))), p_shapes)
+    out_specs = (jax.tree.map(lambda s: s.sharding, f_params),
+                 NamedSharding(mesh, P()))
+    round_fn = make_federated_round(model, fl, D, local_steps,
+                                    out_shardings=out_specs, mesh_info=info)
+    bshape = (D, local_steps, client_batch, seq_len)
+    batches = {"tokens": sds(bshape, jnp.int32, P(dspec, None, None, None)),
+               "labels": sds(bshape, jnp.int32, P(dspec, None, None, None))}
+    survive = sds((D,), jnp.float32, P(dspec))
+
+    t0 = time.time()
+    flops_g, bytes_g = rl.program_cost(
+        lambda fp, b, s: round_fn(fp, b, s, do_global_sync=True),
+        f_params, batches, survive)
+    lowered = round_fn.lower(f_params, batches, survive, do_global_sync=True)
+    compiled = lowered.compile()
+    tokens = D * local_steps * client_batch * seq_len
+    report = rl.analyze(
+        compiled, arch=f"{arch}+fedp2p", shape=f"round_{seq_len}",
+        mesh_name="multi" if multi_pod else "single",
+        chips=mesh.devices.size, cfg=cfg, params_sds=p_shapes, tokens=tokens,
+        mode="train", strategy=f"fedp2p(D={D},L={num_clusters})",
+        flops_global=flops_g, bytes_global=bytes_g)
+    result = report.to_dict()
+    mem = compiled.memory_analysis()
+    result.update({"ok": True, "compile_s": round(time.time() - t0, 1),
+                   "arg_bytes_per_device": float(mem.argument_size_in_bytes),
+                   "temp_bytes_per_device": float(mem.temp_size_in_bytes)})
+    if verbose:
+        print(f"[{arch}+fedp2p x {result['mesh']}] "
+              f"mem={result['peak_mem_per_device_gib']:.2f}GiB/dev "
+              f"compute={report.compute_s:.4f}s memory={report.memory_s:.4f}s "
+              f"coll={report.collective_s:.4f}s dom={report.dominant} "
+              f"useful={report.useful_flops_ratio:.2f}")
+    return result
+
+
+def _opt_sharding(leaf_sds, p_sds, info):
+    """Match m/v leaves to param shardings by shape; scalars replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if leaf_sds.ndim == 0:
+        return NamedSharding(info.mesh, P())
+    for _, p in jax.tree_util.tree_flatten_with_path(p_sds)[0]:
+        if p.shape == leaf_sds.shape:
+            return NamedSharding(info.mesh, p.sharding.spec)
+    return NamedSharding(info.mesh, P())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fedp2p", action="store_true",
+                    help="lower the paper's fedp2p_round instead of the "
+                         "train/serve entry points")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.fedp2p:
+        results, failures = [], []
+        for multi in {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]:
+            try:
+                results.append(dryrun_fedp2p(args.arch or "qwen2-1.5b",
+                                             multi_pod=multi))
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append(repr(e))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+        sys.exit(1 if failures else 0)
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    results.append(dryrun_one(arch, shape, multi_pod=multi))
+                except Exception as e:  # noqa: BLE001 — report all failures
+                    traceback.print_exc()
+                    failures.append((arch, shape, "multi" if multi else "single",
+                                     repr(e)))
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "multi" if multi else "single",
+                                    "ok": False, "error": repr(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    if failures:
+        print(f"FAILURES ({len(failures)}):")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print(f"all {len(results)} dry-runs compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; callers that need the
+512-device placeholder mesh must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before the first
+jax import (see dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 1):
+    """Small mesh for CPU functional tests (device count permitting)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,91 @@
+"""Batched serving driver: prefill + greedy/temperature decode loop with the
+ring/pinned KV cache machinery, usable for any assigned architecture.
+
+CPU-scale by default (reduced configs); the production mesh uses the same
+prefill/decode step builders via --mesh (see dryrun.py for the lowering).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ServeConfig
+from repro.configs import get_config
+from repro.launch.steps import build_decode_step, build_prefill_step
+from repro.models.model import build_model
+
+
+def generate(arch: str, prompts: np.ndarray, *, max_new_tokens: int = 16,
+             temperature: float = 0.0, reduced: bool = True,
+             window: int = 0, seed: int = 0, verbose: bool = False) -> Dict:
+    """prompts: [B, S] int32. Returns generated token ids [B, max_new]."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced(num_layers=2, max_d_model=128)
+    if cfg.family == "audio":
+        raise ValueError("audio serving uses generate_audio() (embeds input)")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    B, S = prompts.shape
+    M = cfg.num_meta_tokens
+    buf = (window or cfg.sliding_window or (S + max_new_tokens)) + M
+    buf = max(buf, M + 1)
+    if cfg.family == "ssm":
+        buf = 8
+    cache = model.make_cache(B, max(buf, S + M + (0 if cfg.sliding_window else max_new_tokens)))
+
+    prefill = jax.jit(build_prefill_step(model))
+    decode = jax.jit(build_decode_step(model))
+
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)}, cache)
+    t_prefill = time.time() - t0
+    key = jax.random.PRNGKey(seed + 1)
+    out: List[jnp.ndarray] = []
+    tok = _sample(logits[:, -1], temperature, key)
+    out.append(tok)
+    t0 = time.time()
+    for i in range(max_new_tokens - 1):
+        key, ks = jax.random.split(key)
+        logits, cache = decode(params, cache, {"token": tok[:, None]})
+        tok = _sample(logits, temperature, ks)
+        out.append(tok)
+    t_decode = time.time() - t0
+    tokens = jnp.stack(out, axis=1)
+    if verbose:
+        print(f"prefill {t_prefill*1e3:.1f} ms; "
+              f"decode {t_decode/max(max_new_tokens-1,1)*1e3:.1f} ms/token")
+    return {"tokens": np.asarray(tokens), "prefill_s": t_prefill,
+            "decode_s_per_token": t_decode / max(max_new_tokens - 1, 1)}
+
+
+def _sample(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    rng = np.random.default_rng(0)
+    cfg = get_config(args.arch).reduced()
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    out = generate(args.arch, prompts, max_new_tokens=args.max_new_tokens,
+                   temperature=args.temperature, verbose=True)
+    print("generated:", out["tokens"][:, :8], "...")
+
+
+if __name__ == "__main__":
+    main()

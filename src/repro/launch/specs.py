@@ -1,0 +1,128 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) entry point —
+weak-type-correct, sharding-annotated, zero device allocation.
+
+The modality-frontend carve-out lives here: audio (musicgen) gets
+precomputed frame embeddings + conditioning context; vlm (chameleon) gets
+mixed token ids (its VQ frontend emits ordinary vocab ids).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.model import Model, build_model
+from repro.sharding.rules import MeshInfo
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+SERVE_WINDOW = 8192          # sliding-window fallback for long_500k
+
+
+def batch_axes(info: MeshInfo, batch: int, mode: str = "train",
+               vocab_size: int = 0):
+    """Axes to shard the batch dim over (see rules.batch_dims)."""
+    from repro.sharding.rules import batch_dims
+    return batch_dims(info, batch, mode, vocab_size)
+
+
+def _sds(shape, dtype, info: Optional[MeshInfo], spec: Optional[P]):
+    if info is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(info.mesh, spec))
+
+
+def buffer_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV-cache slots for serving shapes (per DESIGN.md §6)."""
+    M = cfg.num_meta_tokens
+    if shape.mode == "prefill":
+        return shape.seq_len + M
+    if cfg.family == "ssm":
+        return 8                                  # slot bookkeeping only
+    if cfg.sliding_window:                        # hymba & windowed archs
+        return cfg.sliding_window + M
+    if shape.seq_len > 32_768:                    # long_500k on full-attn archs
+        return SERVE_WINDOW
+    return shape.seq_len + M
+
+
+def token_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      info: Optional[MeshInfo], *, with_labels: bool) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        S = 1
+    bax = batch_axes(info, B, shape.mode, cfg.vocab_size) if info else ()
+    bspec = bax if len(bax) > 1 else (bax[0] if bax else None)
+
+    out: Dict = {}
+    if cfg.family == "audio":
+        key = "embeds" if shape.mode != "decode" else "embed"
+        out[key] = _sds((B, S, cfg.d_model), PARAM_DTYPE, info,
+                        P(bspec, None, None))
+        if shape.mode != "decode":
+            out["cross_context"] = _sds(
+                (B, cfg.cross_context_len, cfg.cross_context_dim),
+                PARAM_DTYPE, info, P(bspec, None, None))
+        if with_labels:
+            out["labels"] = _sds((B, S, cfg.num_codebooks), jnp.int32, info,
+                                 P(bspec, None, None))
+    else:
+        key = "tokens" if shape.mode != "decode" else "token"
+        out[key] = _sds((B, S), jnp.int32, info, P(bspec, None))
+        if with_labels:
+            out["labels"] = _sds((B, S), jnp.int32, info, P(bspec, None))
+    return out
+
+
+def cache_sds(model: Model, cfg: ModelConfig, shape: ShapeConfig,
+              info: Optional[MeshInfo]):
+    """ShapeDtypeStructs (with shardings) for the serving cache."""
+    buf = buffer_len(cfg, shape)
+    B = shape.global_batch
+    cross = cfg.cross_context_len if cfg.cross_attend else 0
+    cache_shape = jax.eval_shape(
+        functools.partial(model.make_cache, B, buf, CACHE_DTYPE,
+                          cross_len=cross))
+    if info is None:
+        return cache_shape
+    from repro.sharding.rules import make_cache_specs
+    specs = make_cache_specs(cache_shape, cfg, info, B)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_shape, specs)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                info: Optional[MeshInfo], model: Optional[Model] = None):
+    """Returns the kwargs-tree of ShapeDtypeStructs for the entry point
+    matching ``shape.mode`` (see launch/steps.py)."""
+    model = model or build_model(cfg)
+    if shape.mode == "train":
+        return {"batch": token_batch_specs(cfg, shape, info, with_labels=True)}
+    if shape.mode == "prefill":
+        return {"batch": token_batch_specs(cfg, shape, info, with_labels=False),
+                "cache": cache_sds(model, cfg, shape, info)}
+    if shape.mode == "decode":
+        cache = cache_sds(model, cfg, shape, info)
+        # decode lowers against a mid-generation cache state: index is a
+        # traced input (part of the cache), so one lowering covers any t.
+        return {"batch": token_batch_specs(cfg, shape, info, with_labels=False),
+                "cache": cache}
+    raise ValueError(shape.mode)
+
+
+def params_sds(model: Model, info: Optional[MeshInfo], mode: str = "train"):
+    shapes = jax.eval_shape(
+        functools.partial(model.init, dtype=PARAM_DTYPE), jax.random.key(0))
+    if info is None:
+        return shapes
+    from repro.sharding.rules import make_param_specs
+    specs = make_param_specs(shapes, model.cfg, info, mode=mode)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, specs)

@@ -1,0 +1,125 @@
+"""Entry-point step functions lowered by the dry-run and drivers.
+
+  train_step   : fwd+bwd + AdamW update (remat, grad clip)
+  prefill_step : full-sequence forward emitting the KV cache
+  decode_step  : ONE token against the cache (ring/pinned addressing inside)
+  fedp2p_round : the paper's protocol (see core/fedp2p.py) — the
+                 paper-representative lowering in the roofline study
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models.model import Model
+from repro.optim import make_optimizer
+from repro.optim.optimizers import apply_updates, clip_by_global_norm
+from repro.sharding.context import use_rules
+from repro.sharding.rules import MeshInfo, make_activation_rules
+
+
+def build_train_step(model: Model, train_cfg: TrainConfig,
+                     info: Optional[MeshInfo] = None, batch_size: int = 0):
+    opt = make_optimizer(train_cfg)
+    rules = (make_activation_rules(model.cfg, info, mode="train",
+                                   batch=batch_size) if info else None)
+
+    loss_and_grad = jax.value_and_grad(
+        functools.partial(model.loss_fn, remat=train_cfg.remat), has_aux=True)
+    mb = max(1, train_cfg.microbatches)
+
+    def _grad_shardings(params):
+        """Pin gradient-accumulation buffers to the PARAM shardings: each
+        microbatch's reduction then lowers to a reduce-scatter into shards
+        instead of a full all-reduce of replicated f32 buffers
+        (EXPERIMENTS.md §Perf iteration 1)."""
+        if info is None:
+            return None
+        from repro.sharding.rules import make_param_specs
+        return make_param_specs(params, model.cfg, info)
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules, mesh_info=info):
+            if mb == 1:
+                (loss, metrics), grads = loss_and_grad(params, batch)
+            else:
+                # gradient accumulation: scan over microbatches, each
+                # fwd+bwd is fully transient -> activation memory / mb.
+                def split(leaf):
+                    b = leaf.shape[0]
+                    assert b % mb == 0, (b, mb)
+                    mini = leaf.reshape((b // mb, mb) + leaf.shape[1:])
+                    return jnp.moveaxis(mini, 1, 0)     # [mb, b/mb, ...]
+
+                micro = jax.tree.map(split, batch)
+
+                gspecs = _grad_shardings(params)
+
+                def _pin(tree):
+                    if gspecs is None:
+                        return tree
+                    return jax.tree.map(jax.lax.with_sharding_constraint,
+                                        tree, gspecs)
+
+                def acc_step(carry, mbatch):
+                    g_acc, l_acc = carry
+                    (loss, _), grads = loss_and_grad(params, mbatch)
+                    g_acc = _pin(jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc, grads))
+                    return (g_acc, l_acc + loss), None
+
+                g0 = _pin(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params))
+                (grads, loss_sum), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+                grads = jax.tree.map(lambda g: g / mb, grads)
+                loss = loss_sum / mb
+                metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+            grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip)
+            updates, new_opt = opt.update(grads, opt_state, params)
+            new_params = apply_updates(params, updates)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm, **metrics}
+
+    return train_step, opt
+
+
+def build_prefill_step(model: Model, info: Optional[MeshInfo] = None,
+                       batch_size: int = 0):
+    rules = (make_activation_rules(model.cfg, info, mode="prefill",
+                                   batch=batch_size) if info else None)
+
+    def prefill_step(params, batch, cache):
+        with use_rules(rules, mesh_info=info):
+            return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def build_decode_step(model: Model, info: Optional[MeshInfo] = None,
+                      batch_size: int = 0):
+    rules = (make_activation_rules(model.cfg, info, mode="decode",
+                                   batch=batch_size) if info else None)
+
+    def decode_step(params, cache, batch):
+        with use_rules(rules, mesh_info=info):
+            return model.decode(params, cache, batch)
+
+    return decode_step
+
+
+def entry_point(model: Model, mode: str, train_cfg: TrainConfig,
+                info: Optional[MeshInfo], batch_size: int):
+    """(callable, arg-order) for ``input_specs`` kwargs; see dryrun.py."""
+    if mode == "train":
+        step, _ = build_train_step(model, train_cfg, info, batch_size)
+        return lambda params, opt_state, batch: step(params, opt_state, batch)
+    if mode == "prefill":
+        step = build_prefill_step(model, info, batch_size)
+        return lambda params, batch, cache: step(params, batch, cache)
+    if mode == "decode":
+        step = build_decode_step(model, info, batch_size)
+        return lambda params, cache, batch: step(params, cache, batch)
+    raise ValueError(mode)

@@ -1,0 +1,251 @@
+"""Shared layer primitives: norms, MLP variants, RoPE, initializers.
+
+Params are plain nested dicts of jnp arrays. Every init_* function takes an
+explicit PRNG key and dtype; every apply function is pure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, shape, dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init (what most LLM codebases use)."""
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: int, dtype) -> Dict:
+    p = {"scale": jnp.zeros((dim,), dtype) if cfg.norm_type == "rmsnorm_p1"
+         else jnp.ones((dim,), dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """RMSNorm / gemma-style RMSNorm(1+w) / LayerNorm.
+
+    Only the REDUCTIONS run in fp32; the full tensor stays in its compute
+    dtype. (A full fp32 cast of x makes XLA hoist an fp32 copy of the
+    remat-saved layer inputs — an 18 GiB/device regression on the 60-layer
+    configs; see EXPERIMENTS.md §Perf.)"""
+    if cfg.norm_type == "layernorm":
+        mu = (_row_sum(x) / x.shape[-1])[..., None]
+        xc = x - mu.astype(x.dtype)
+        var = (_self_dot(xc) / x.shape[-1])[..., None]
+        inv = jax.lax.rsqrt(var + cfg.norm_eps).astype(x.dtype)
+        y = xc * inv
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = (_self_dot(x) / x.shape[-1])[..., None]
+        inv = jax.lax.rsqrt(ms + cfg.norm_eps).astype(x.dtype)
+        scale = p["scale"]
+        if cfg.norm_type == "rmsnorm_p1":
+            scale = 1.0 + scale
+        y = x * inv * scale
+    return y
+
+
+def _self_dot(x: jnp.ndarray) -> jnp.ndarray:
+    """sum(x*x) over the last dim with f32 ACCUMULATION but bf16 operands —
+    avoids a full-tensor f32 convert of x (which XLA hoists into an f32 copy
+    of the remat-saved activations; see EXPERIMENTS.md §Perf iteration 3)."""
+    return jax.lax.dot_general(
+        x[..., None, :], x[..., None, :],
+        (((x.ndim,), (x.ndim,)), (tuple(range(x.ndim - 1)),
+                                  tuple(range(x.ndim - 1)))),
+        preferred_element_type=jnp.float32)[..., 0, 0]
+
+
+def _row_sum(x: jnp.ndarray) -> jnp.ndarray:
+    ones = jnp.ones((x.shape[-1],), x.dtype)
+    return jax.lax.dot_general(
+        x, ones, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def rms_normalize(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Stateless RMSNorm with an externally supplied scale (qk-norm etc.).
+    f32 accumulation via self-dot; operands stay in compute dtype."""
+    ms = (_self_dot(x) / x.shape[-1])[..., None]
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_model: int, d_ff: int, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.mlp_variant in ("swiglu", "geglu")
+    p = {"w_in": dense_init(k1, d_model, (d_model, d_ff), dtype),
+         "w_out": dense_init(k2, d_ff, (d_ff, d_model), dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, d_model, (d_model, d_ff), dtype)
+    if cfg.mlp_bias:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def apply_mlp(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = x @ p["w_in"]
+    if "b_in" in p:
+        h = h + p["b_in"]
+    v = cfg.mlp_variant
+    if v == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif v == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * h
+    elif v == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif v == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(f"unknown mlp variant {v}")
+    out = h @ p["w_out"]
+    if "b_out" in p:
+        out = out + p["b_out"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(cfg: ModelConfig, head_dim: int) -> jnp.ndarray:
+    rot = int(head_dim * cfg.rope_pct)
+    rot -= rot % 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig,
+               head_dim: int = 0) -> jnp.ndarray:
+    """Rotate the first ``rope_pct * head_dim`` dims of ``x``.
+
+    x: [..., S, H, hd] (or [..., S, hd] for single-head rope parts),
+    positions: broadcastable to [..., S].
+    """
+    hd = head_dim or x.shape[-1]
+    inv_freq = rope_frequencies(cfg, hd)
+    rot = inv_freq.shape[0] * 2
+    if rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # [..., S, rot/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == cos.ndim + 1:           # [..., S, H, hd]: broadcast over heads
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig, dtype) -> Dict:
+    keys = jax.random.split(key, 2)
+    p = {"table": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(keys[1], cfg.d_model, (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed_tokens(p: Dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def compute_logits(p: Dict, h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = h @ p["table"].T
+    else:
+        logits = h @ p["unembed"]
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def chunked_cross_entropy(embed_params: Dict, h: jnp.ndarray,
+                          labels: jnp.ndarray, cfg: ModelConfig,
+                          chunk: int = 512,
+                          heads: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Fused unembed+CE over sequence chunks so the full [B,S,V] f32 logits
+    tensor never materializes (V can be 256k). Each chunk is checkpointed:
+    backward recomputes its logits. ``heads`` (audio): [d, K*V] projection;
+    labels then [B,S,K]."""
+    B, S, d = h.shape
+    cs = chunk
+    while S % cs:
+        cs -= 1
+    nc = S // cs
+
+    def chunk_loss(h_c, lab_c):
+        if heads is not None:
+            logits = (h_c @ heads).reshape(h_c.shape[0], h_c.shape[1],
+                                           cfg.num_codebooks, cfg.vocab_size)
+        else:
+            logits = compute_logits(embed_params, h_c, cfg)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        vocab_iota = jnp.arange(logits.shape[-1], dtype=lab_c.dtype)
+        gold = jnp.sum(jnp.where(lab_c[..., None] == vocab_iota, logits, 0.0),
+                       axis=-1)
+        return jnp.sum(lse - gold)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    h_chunks = jnp.moveaxis(h.reshape(B, nc, cs, d), 1, 0)
+    lab = labels.reshape((B, nc, cs) + labels.shape[2:])
+    lab_chunks = jnp.moveaxis(lab, 1, 0)
+
+    def body(tot, xs):
+        hc, lc = xs
+        return tot + chunk_loss(hc, lc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (h_chunks, lab_chunks))
+    denom = labels.size
+    return total / denom
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token-level cross entropy; logits [..., V], labels [...] int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # One-hot-style gather written as a fused select+reduce: partitions cleanly
+    # when the vocab dim is sharded (no cross-shard gather op).
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(labels[..., None] == vocab_iota, logits, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

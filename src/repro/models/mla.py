@@ -1,0 +1,112 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill expand the compressed latent back into per-head K/V and reuse
+the shared blocked-attention core. Decode uses the ABSORBED formulation:
+W_uk folds into the query and W_uv into the output so attention runs directly
+against the latent cache — the point of MLA is that this cache is
+``kv_lora_rank + rope_dim`` wide instead of ``2 * num_heads * head_dim``.
+
+Buffer/cache bookkeeping (ring slots, positions) is owned by transformer.py,
+mirroring attention.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.attention import NEG_INF, attention_core, mask_block, pos1d
+from repro.models.layers import apply_rope, dense_init, rms_normalize
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], d, (d, r), dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+        "w_uk": dense_init(ks[1], r, (r, h, nope), dtype),
+        "w_uv": dense_init(ks[2], r, (r, h, vd), dtype),
+        "w_kr": dense_init(ks[3], d, (d, rope_d), dtype),
+        "wo": dense_init(ks[4], h * vd, (h * vd, d), dtype),
+    }
+    if qr > 0:
+        p["w_dq"] = dense_init(ks[5], d, (d, qr), dtype)
+        p["q_norm"] = jnp.ones((qr,), dtype)
+        p["w_uq"] = dense_init(ks[6], qr, (qr, h, nope + rope_d), dtype)
+    else:
+        p["w_q"] = dense_init(ks[7], d, (d, h, nope + rope_d), dtype)
+    return p
+
+
+def _queries(p: Dict, x: jnp.ndarray, cfg: ModelConfig, positions):
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank > 0:
+        q = rms_normalize(x @ p["w_dq"], p["q_norm"])
+        q = jnp.einsum("bsq,qhd->bshd", q, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg, head_dim=rope_d)
+    return q_nope, q_rope                      # [B,S,H,nope], [B,S,H,rope]
+
+
+def _latent(p: Dict, x: jnp.ndarray, cfg: ModelConfig, positions):
+    c = rms_normalize(x @ p["w_dkv"], p["kv_norm"])           # [B,S,r]
+    k_rope = apply_rope(x @ p["w_kr"], positions, cfg,
+                        head_dim=cfg.qk_rope_head_dim)        # [B,S,rope]
+    return c, k_rope
+
+
+def mla_attention(p: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                  positions: jnp.ndarray, window=0, num_meta=0,
+                  kv_bufs: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                  kv_pos: Optional[jnp.ndarray] = None,
+                  write_slot: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """kv_bufs = (latent [B,W,r], k_rope [B,W,rope]) when serving."""
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c, k_rope = _latent(p, x, cfg, positions)
+
+    if kv_bufs is not None and S == 1:
+        # ---- absorbed decode against the latent cache ----
+        lat_buf, kr_buf = kv_bufs
+        lat_buf = jax.lax.dynamic_update_slice(lat_buf, c, (0, write_slot, 0))
+        kr_buf = jax.lax.dynamic_update_slice(kr_buf, k_rope, (0, write_slot, 0))
+        # absorb W_uk into q:  [B,1,H,nope] x [r,H,nope] -> [B,H,r]
+        q_lat = jnp.einsum("bshd,rhd->bhr", q_nope, p["w_uk"])
+        scale = (nope + rope_d) ** -0.5
+        s_lat = jnp.einsum("bhr,btr->bht", q_lat, lat_buf)
+        s_rope = jnp.einsum("bshe,bte->bht", q_rope, kr_buf)
+        scores = (s_lat + s_rope).astype(jnp.float32) * scale   # [B,H,T]
+        msk = mask_block(positions[:1, 0], kv_pos, window, num_meta)[0]
+        scores = jnp.where(msk[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(lat_buf.dtype)
+        ctx_lat = jnp.einsum("bht,btr->bhr", probs, lat_buf)
+        out = jnp.einsum("bhr,rhv->bhv", ctx_lat, p["w_uv"])    # absorb W_uv
+        y = out.reshape(B, 1, h * vd) @ p["wo"]
+        return y, (lat_buf, kr_buf)
+
+    # ---- train / prefill: expand latent to per-head K/V ----
+    k_nope = jnp.einsum("bsr,rhd->bshd", c, p["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", c, p["w_uv"])
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, S, h, rope_d))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    pos_flat = pos1d(positions)
+    out = attention_core(q, k, v, pos_flat, pos_flat, window, num_meta)
+    y = out.reshape(B, S, h * vd) @ p["wo"]
+    new_bufs = None
+    if kv_bufs is not None:                                   # prefill
+        lat_buf, kr_buf = kv_bufs
+        lat_buf = jax.lax.dynamic_update_slice(lat_buf, c, (0, 0, 0))
+        kr_buf = jax.lax.dynamic_update_slice(kr_buf, k_rope, (0, 0, 0))
+        new_bufs = (lat_buf, kr_buf)
+    return y, new_bufs

@@ -1,0 +1,87 @@
+"""Public model API: ``build_model(cfg)`` returns a ``Model`` facade with
+pure functions for init / train loss / prefill / decode, uniform across all
+ten architectures. Batch schemas:
+
+  LM families (dense/moe/ssm/hybrid/vlm):
+      train:   {"tokens": [B,S] i32, "labels": [B,S] i32}
+      prefill: {"tokens": [B,S]}
+      decode:  {"token":  [B,1]}
+  audio (musicgen — frontend stub provides embeddings):
+      train:   {"embeds": [B,S,d], "cross_context": [B,Tc,cd], "labels": [B,S,K] i32}
+      prefill: {"embeds": ..., "cross_context": ...}
+      decode:  {"embed": [B,1,d]}
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer
+from repro.models.layers import chunked_cross_entropy, cross_entropy
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode: Callable
+    make_cache: Callable
+
+
+def _forward_kwargs(cfg: ModelConfig, batch: Dict) -> Dict:
+    kw: Dict = {}
+    if cfg.family == "audio":
+        kw["embeds"] = batch.get("embeds", batch.get("embed"))
+        if "cross_context" in batch:
+            kw["cross_context"] = batch["cross_context"]
+    else:
+        kw["tokens"] = batch.get("tokens", batch.get("token"))
+    return kw
+
+
+def build_model(cfg: ModelConfig) -> Model:
+
+    def init(key, dtype=jnp.float32):
+        return transformer.init_params(key, cfg, dtype)
+
+    def loss_fn(params, batch, *, remat: bool = False):
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            # fused chunked unembed+CE: full [B,S,V] f32 logits never exist
+            h, _, aux = transformer.forward(
+                params, cfg, cache=None, remat=remat, return_hidden=True,
+                **_forward_kwargs(cfg, batch))
+            heads = params.get("heads") if cfg.family == "audio" else None
+            embed = params.get("embed")
+            ce = chunked_cross_entropy(embed, h, labels, cfg, heads=heads)
+        else:
+            logits, _, aux = transformer.forward(
+                params, cfg, cache=None, remat=remat,
+                **_forward_kwargs(cfg, batch))
+            ce = cross_entropy(logits, labels, mask)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def make_cache(batch: int, buf_len: int, dtype=jnp.float32,
+                   cross_len: int = 0):
+        return transformer.init_cache(cfg, batch, buf_len, dtype,
+                                      cross_len=cross_len)
+
+    def prefill(params, batch, cache):
+        logits, cache, _ = transformer.forward(
+            params, cfg, cache=cache, **_forward_kwargs(cfg, batch))
+        return logits[:, -1:], cache
+
+    def decode(params, cache, batch):
+        logits, cache, _ = transformer.forward(
+            params, cfg, cache=cache, **_forward_kwargs(cfg, batch))
+        return logits[:, -1], cache
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
+                 decode=decode, make_cache=make_cache)

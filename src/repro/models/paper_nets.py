@@ -1,0 +1,112 @@
+"""The paper's own model classes (§4.2), pure-jnp so the FL simulator can
+vmap them over hundreds of clients.
+
+  logreg : logistic regression (synthetic 60-d / MNIST 784-d)
+  cnn    : 2-layer CNN, hidden 64 (FEMNIST)
+  lstm   : 1-layer LSTM, hidden 256, char classes 80 (Shakespeare)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import PaperNetConfig
+from repro.models.layers import dense_init, embed_init
+
+
+# ---------------------------------------------------------------------------
+# init / forward dispatch
+# ---------------------------------------------------------------------------
+
+def init_paper_net(key, cfg: PaperNetConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    if cfg.kind == "logreg":
+        return {"w": jnp.zeros((cfg.input_dim, cfg.num_classes), dtype),
+                "b": jnp.zeros((cfg.num_classes,), dtype)}
+    if cfg.kind == "cnn":
+        h = cfg.hidden
+        flat = (cfg.image_size // 4) ** 2 * h
+        return {
+            "conv1": dense_init(ks[0], 25 * cfg.channels, (5, 5, cfg.channels, h // 2), dtype),
+            "b1": jnp.zeros((h // 2,), dtype),
+            "conv2": dense_init(ks[1], 25 * h // 2, (5, 5, h // 2, h), dtype),
+            "b2": jnp.zeros((h,), dtype),
+            "fc": dense_init(ks[2], flat, (flat, cfg.num_classes), dtype),
+            "bf": jnp.zeros((cfg.num_classes,), dtype),
+        }
+    if cfg.kind == "lstm":
+        h, e = cfg.hidden, cfg.embed_dim
+        return {
+            "embed": embed_init(ks[0], (cfg.vocab, e), dtype),
+            "wx": dense_init(ks[1], e, (e, 4 * h), dtype),
+            "wh": dense_init(ks[2], h, (h, 4 * h), dtype),
+            "bh": jnp.zeros((4 * h,), dtype),
+            "fc": dense_init(ks[3], h, (h, cfg.num_classes), dtype),
+            "bf": jnp.zeros((cfg.num_classes,), dtype),
+        }
+    raise ValueError(cfg.kind)
+
+
+def _conv2d(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def paper_net_forward(params: Dict, x: jnp.ndarray, cfg: PaperNetConfig) -> jnp.ndarray:
+    """x: logreg [B,D] float; cnn [B,H,W,C] float; lstm [B,T] int32."""
+    if cfg.kind == "logreg":
+        return x @ params["w"] + params["b"]
+    if cfg.kind == "cnn":
+        y = _maxpool2(_conv2d(x, params["conv1"], params["b1"]))
+        y = _maxpool2(_conv2d(y, params["conv2"], params["b2"]))
+        y = y.reshape(y.shape[0], -1)
+        return y @ params["fc"] + params["bf"]
+    if cfg.kind == "lstm":
+        e = jnp.take(params["embed"], x, axis=0)            # [B,T,e]
+        B = x.shape[0]
+        h0 = jnp.zeros((B, cfg.hidden), e.dtype)
+        c0 = jnp.zeros((B, cfg.hidden), e.dtype)
+
+        def step(carry, et):
+            h, c = carry
+            gates = et @ params["wx"] + h @ params["wh"] + params["bh"]
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), None
+
+        (h, _), _ = jax.lax.scan(step, (h0, c0), jnp.swapaxes(e, 0, 1))
+        return h @ params["fc"] + params["bf"]
+    raise ValueError(cfg.kind)
+
+
+def paper_net_loss(params: Dict, batch: Dict, cfg: PaperNetConfig) -> jnp.ndarray:
+    """batch: {"x": inputs, "y": [B] int labels, "mask": [B] 0/1}."""
+    logits = paper_net_forward(params, batch["x"], cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    mask = batch.get("mask")
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def paper_net_accuracy(params: Dict, batch: Dict, cfg: PaperNetConfig) -> jnp.ndarray:
+    logits = paper_net_forward(params, batch["x"], cfg)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == batch["y"]).astype(jnp.float32)
+    mask = batch.get("mask")
+    if mask is None:
+        return jnp.mean(correct)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(correct * m) / jnp.maximum(jnp.sum(m), 1.0)

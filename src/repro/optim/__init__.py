@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, momentum, sgd, make_optimizer, clip_by_global_norm,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule, cosine_schedule, warmup_cosine_schedule, make_schedule,
+)

@@ -1,0 +1,119 @@
+"""Pure-pytree optimizers (no external deps): SGD, momentum, AdamW.
+
+API mirrors the optax pattern:
+    opt = adamw(lr=..., ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)   # updates = deltas
+    params = apply_updates(params, updates)
+Learning rates may be floats or schedules (callables of the int step).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step) -> jnp.ndarray:
+    return jnp.asarray(lr(step) if callable(lr) else lr, jnp.float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        eta = _lr_at(lr, step)
+        updates = jax.tree.map(lambda g: -eta * g.astype(jnp.float32), grads)
+        return updates, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        eta = _lr_at(lr, step)
+        m = jax.tree.map(lambda mo, g: beta * mo + g.astype(jnp.float32),
+                         state["m"], grads)
+        updates = jax.tree.map(lambda mo: -eta * mo, m)
+        return updates, {"step": step + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, beta1: float = 0.9, beta2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = _lr_at(lr, step)
+        bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = beta1 * m + (1 - beta1) * g
+            v_new = beta2 * v + (1 - beta2) * jnp.square(g)
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = -eta * (mh / (jnp.sqrt(vh) + eps)
+                            + weight_decay * p.astype(jnp.float32))
+            return delta, m_new, v_new
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        m = tdef.unflatten([o[1] for o in out])
+        v = tdef.unflatten([o[2] for o in out])
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: TrainConfig, lr: Schedule = None) -> Optimizer:
+    lr = cfg.lr if lr is None else lr
+    if cfg.optimizer == "sgd":
+        return sgd(lr)
+    if cfg.optimizer == "momentum":
+        return momentum(lr, cfg.momentum)
+    if cfg.optimizer == "adamw":
+        return adamw(lr, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    raise ValueError(cfg.optimizer)

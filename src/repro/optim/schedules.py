@@ -1,0 +1,39 @@
+"""Learning-rate schedules (callables of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine_schedule(lr: float, warmup_steps: int, total_steps: int,
+                           final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return f
+
+
+def make_schedule(cfg: TrainConfig):
+    if cfg.schedule == "constant":
+        return constant_schedule(cfg.lr)
+    if cfg.schedule == "cosine":
+        return cosine_schedule(cfg.lr, cfg.total_steps)
+    if cfg.schedule == "warmup_cosine":
+        return warmup_cosine_schedule(cfg.lr, cfg.warmup_steps, cfg.total_steps)
+    raise ValueError(cfg.schedule)

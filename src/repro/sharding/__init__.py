@@ -1,0 +1,11 @@
+from repro.sharding.context import (  # noqa: F401
+    activation_spec,
+    current_rules,
+    shard,
+    use_rules,
+)
+from repro.sharding.rules import (  # noqa: F401
+    choose_strategy,
+    make_activation_rules,
+    make_param_specs,
+)

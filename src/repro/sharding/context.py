@@ -1,0 +1,54 @@
+"""Activation-sharding context.
+
+Model code calls ``shard(x, "act_btd")`` at strategic points. When a launcher
+has installed activation rules (a dict logical-name -> PartitionSpec) via
+``use_rules``, this becomes ``jax.lax.with_sharding_constraint``; otherwise it
+is a no-op, so the same model code runs unmodified in CPU smoke tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, PartitionSpec]]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh_info():
+    """MeshInfo installed by the launcher (None in CPU smoke tests)."""
+    return getattr(_state, "mesh_info", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Dict[str, PartitionSpec]], mesh_info=None):
+    prev = current_rules()
+    prev_info = current_mesh_info()
+    _state.rules = rules
+    _state.mesh_info = mesh_info
+    try:
+        yield
+    finally:
+        _state.rules = prev
+        _state.mesh_info = prev_info
+
+
+def activation_spec(name: str) -> Optional[PartitionSpec]:
+    rules = current_rules()
+    if rules is None:
+        return None
+    return rules.get(name)
+
+
+def shard(x, name: str):
+    """Constrain ``x`` to the logical sharding ``name`` (no-op w/o rules)."""
+    spec = activation_spec(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

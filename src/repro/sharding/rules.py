@@ -1,0 +1,312 @@
+"""Parameter & activation sharding rules.
+
+Three strategies, chosen per architecture against the fixed production mesh
+(data=16, model=16[, pod=2]):
+
+  tp     — attention-head tensor parallelism over ``model`` + FSDP over
+           ``data`` (+ pod). Requires num_heads % model == 0. Used by
+           nemotron (48H), dbrx (48H), chameleon (64H), deepseek (128H).
+           GQA kv-projections with kv_heads < model stay replicated over
+           ``model`` (they are small); MoE experts shard over ``model``.
+  seqtp  — heads not divisible by ``model`` (qwen2 12H, gemma 8H, yi 56H,
+           musicgen 24H): weights ZeRO-3 over (data, model) jointly;
+           activations batch-sharded over ``data``; the ``model`` axis
+           contributes memory capacity. (Hillclimb: fold the model axis
+           into sequence parallelism — see EXPERIMENTS.md §Perf.)
+  dp     — SSM-bearing archs (mamba2, hymba): like seqtp (the sequential
+           scan core makes sequence sharding a pessimization).
+
+KV caches always shard the buffer (sequence) dim over ``model`` and batch
+over data axes when divisible — this is what lets 1TB-scale 32k caches fit
+16 GB/chip.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig
+
+
+@dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]          # ('data',) or ('pod', 'data')
+    tp_axis: str                      # 'model'
+    strategy: str                     # tp | seqtp | dp
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp_axis])
+
+
+def choose_strategy(cfg: ModelConfig, tp_size: int) -> str:
+    if cfg.family == "ssm" or cfg.ssm_state:
+        return "dp"
+    if cfg.num_heads % tp_size == 0 and (
+            cfg.num_experts == 0 or cfg.num_experts % tp_size == 0):
+        return "tp"
+    return "seqtp"
+
+
+def make_mesh_info(cfg: ModelConfig, mesh: Mesh) -> MeshInfo:
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return MeshInfo(mesh=mesh, dp_axes=dp_axes, tp_axis="model",
+                    strategy=choose_strategy(cfg, int(mesh.shape["model"])))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _div(n: int, axes: Tuple[str, ...], mesh: Mesh) -> bool:
+    return n % int(np.prod([mesh.shape[a] for a in axes])) == 0
+
+
+def _embed_spec(shape, info: MeshInfo) -> P:
+    """[V, d] table: prefer vocab over model (logits stay vocab-sharded,
+    lookups mask+reduce); guard every sharded dim for divisibility (input
+    avals must shard evenly)."""
+    dp, tp = info.dp_axes, info.tp_axis
+    mesh = info.mesh
+    v, d = shape
+    if _div(v, (tp,), mesh):
+        return P(tp, dp if _div(d, dp, mesh) else None)
+    if _div(d, dp + (tp,), mesh):
+        return P(None, dp + (tp,))
+    if _div(d, (tp,), mesh):
+        return P(None, tp)
+    return P(None, dp if _div(d, dp, mesh) else None)
+
+
+def _unembed_spec(shape, info: MeshInfo) -> P:
+    """[d, V] projection: vocab over model when divisible."""
+    dp, tp = info.dp_axes, info.tp_axis
+    mesh = info.mesh
+    d, v = shape
+    if _div(v, (tp,), mesh):
+        return P(dp if _div(d, dp, mesh) else None, tp)
+    if _div(d, dp + (tp,), mesh):
+        return P(dp + (tp,), None)
+    return P(dp if _div(d, dp, mesh) else None, None)
+
+
+def _tp_leaf_spec(path: str, shape, info: MeshInfo) -> P:
+    """Per-tensor rules for the `tp` strategy. `path` has the scan L-dim
+    stripped; returned specs are re-padded by the caller."""
+    dp, tp = info.dp_axes, info.tp_axis
+    mesh = info.mesh
+
+    def fs(dim_idx: int) -> Optional[Tuple[str, ...]]:
+        return dp if _div(shape[dim_idx], dp, mesh) else None
+
+    if path.endswith("embed/table"):
+        return _embed_spec(shape, info)
+    if path.endswith("embed/unembed") or path.endswith("/heads") or path == "heads":
+        return _unembed_spec(shape, info)
+    if "/attn/" in path or "/cross/" in path:
+        name = path.rsplit("/", 1)[-1]
+        if name in ("wq",):
+            return P(fs(0), tp)
+        if name in ("wk", "wv"):
+            tpk = tp if shape[1] % info.tp_size == 0 else None
+            return P(fs(0), tpk)
+        if name == "wo":
+            return P(tp, fs(1))
+        if name == "bq":
+            return P(tp if shape[0] % info.tp_size == 0 else None)
+        # MLA tensors
+        if name in ("w_dq", "w_dkv", "w_kr"):
+            return P(fs(0), None)
+        if name in ("w_uq", "w_uk", "w_uv"):
+            return P(None, tp, None)
+        return P(*([None] * len(shape)))
+    if "/mlp/" in path or "/shared/" in path:
+        name = path.rsplit("/", 1)[-1]
+        if name in ("w_in", "w_gate"):
+            return P(fs(0), tp)
+        if name == "w_out":
+            return P(tp, fs(1))
+        if name == "b_in":
+            return P(tp)
+        return P(*([None] * len(shape)))
+    if "/moe/" in path:
+        name = path.rsplit("/", 1)[-1]
+        if name in ("w_in", "w_gate"):
+            return P(tp, fs(1), None)
+        if name == "w_out":
+            return P(tp, None, fs(2))
+        if name == "router":
+            return P(fs(0), None)
+        return P(*([None] * len(shape)))
+    if "/ssm/" in path:
+        name = path.rsplit("/", 1)[-1]
+        if name in ("in_proj", "out_proj"):
+            return P(fs(0), None)
+        return P(*([None] * len(shape)))
+    return P(*([None] * len(shape)))
+
+
+def _zero3_leaf_spec(path: str, shape, info: MeshInfo) -> P:
+    """seqtp/dp: shard the largest suitable dim over (dp..., model) jointly,
+    falling back to dp-only, then replicate. Embeddings keep the tp layout
+    (vocab/model) so logits stay vocab-sharded."""
+    dp, tp = info.dp_axes, info.tp_axis
+    mesh = info.mesh
+    all_axes = dp + (tp,)
+    if path.endswith("embed/table"):
+        return _embed_spec(shape, info)
+    if path.endswith("embed/unembed") or path.endswith("/heads") or path == "heads":
+        return _unembed_spec(shape, info)
+    if len(shape) < 2 or min(shape) == 0:
+        return P(*([None] * len(shape)))
+    # pick the largest dim; try (dp+tp), then dp, then tp
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        for axes in (all_axes, dp, (tp,)):
+            if _div(shape[i], axes, mesh):
+                spec = [None] * len(shape)
+                spec[i] = axes if len(axes) > 1 else axes[0]
+                return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def _decode_respec(path: str, shape, spec: P, info: MeshInfo) -> P:
+    """Weight-stationary decode (§Perf beyond-paper): drop the FSDP (data)
+    axes from weight shardings so no per-token weight all-gathers occur —
+    weights live tp-sharded (model axis) and stay put. (A 2D "both axes"
+    variant was tried and REFUTED: GSPMD lowers the data-sharded contraction
+    back to weight all-gathers.) Experts and embeddings keep their train
+    layout (experts would not fit tp-only; embeddings are already 2D)."""
+    if "/moe/w_" in path or "embed/" in path or path == "heads" \
+            or path.endswith("/heads"):
+        return spec
+    tp = info.tp_axis
+    entries = []
+    changed = False
+    for entry in spec:
+        axes = entry if isinstance(entry, tuple) else ((entry,) if entry else ())
+        if any(a in info.dp_axes for a in axes):
+            kept = tuple(a for a in axes if a not in info.dp_axes)
+            entries.append(kept[0] if len(kept) == 1 else (kept or None))
+            changed = True
+        else:
+            entries.append(entry)
+    if not changed:
+        return spec
+    new = P(*entries)
+    # if tp no longer shards anything, place tp on a divisible dim
+    if all(e in (None, ()) for e in new):
+        for dim in range(len(shape) - 1, -1, -1):
+            if shape[dim] % info.tp_size == 0:
+                es = [None] * len(shape)
+                es[dim] = tp
+                return P(*es)
+    return new
+
+
+def make_param_specs(params, cfg: ModelConfig, info: MeshInfo,
+                     mode: str = "train"):
+    """Pytree of NamedSharding matching ``params``. Leaves under the scanned
+    "layers"/"dense_layers" subtrees carry a leading L dim (replicated).
+    ``mode='decode'`` switches to the weight-stationary layout."""
+    leaf_fn = _tp_leaf_spec if info.strategy == "tp" else _zero3_leaf_spec
+
+    def one(path_tuple, leaf):
+        keys = [getattr(pk, "key", getattr(pk, "idx", "")) for pk in path_tuple]
+        path = "/".join(str(k) for k in keys)
+        shape = leaf.shape
+        stacked = keys and keys[0] in ("layers", "dense_layers")
+        inner_shape = shape[1:] if stacked else shape
+        spec = leaf_fn(path, inner_shape, info)
+        if mode == "decode":
+            spec = _decode_respec(path, inner_shape, spec, info)
+        if stacked:
+            spec = P(None, *spec)
+        return NamedSharding(info.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Activation rules
+# ---------------------------------------------------------------------------
+
+def batch_dims(info: MeshInfo, batch: int, mode: str = "train",
+               vocab_size: int = 0) -> Tuple[str, ...]:
+    """Mesh axes for the batch dim. For seqtp/dp TRAINING the ``model`` axis
+    joins data parallelism when the global batch divides (§Perf iteration 2:
+    removes all per-layer activation all-reduces for sub-16-head archs).
+    Large-vocab (>64k) archs are excluded: their hoisted embed/unembed
+    gathers blow per-device memory under pure-DP (§Perf iteration 2b)."""
+    mesh = info.mesh
+    dp = info.dp_axes
+    if (info.strategy != "tp" and mode == "train"
+            and 0 < vocab_size <= 65_536
+            and batch % (info.dp_size * info.tp_size) == 0):
+        return dp + (info.tp_axis,)
+    if batch % info.dp_size == 0:
+        return dp
+    if batch % int(mesh.shape[dp[-1]]) == 0:
+        return dp[-1:]
+    return ()
+
+
+def make_activation_rules(cfg: ModelConfig, info: MeshInfo, *,
+                          mode: str, batch: int) -> Dict[str, NamedSharding]:
+    """Logical activation names -> NamedSharding. ``mode``: train | prefill
+    | decode."""
+    dp, tp = info.dp_axes, info.tp_axis
+    mesh = info.mesh
+    bdp = batch_dims(info, batch, mode, cfg.vocab_size)
+    b = bdp if bdp else None
+
+    rules: Dict[str, P] = {}
+    if info.strategy == "tp":
+        rules["act_btd"] = P(b, None, None)
+        rules["act_q"] = P(b, None, tp)
+        kv_tp = tp if (cfg.num_kv_heads * cfg.head_dim) % info.tp_size == 0 \
+            and cfg.num_kv_heads % info.tp_size == 0 else None
+        rules["act_kv"] = P(b, None, kv_tp)
+        rules["act_btv"] = P(b, None, tp)
+        rules["moe_ecd"] = P(tp, None, None)
+    else:
+        vocab_tp = None if (bdp and tp in bdp) else tp
+        rules["act_btd"] = P(b, None, None)
+        rules["act_q"] = P(b, None, None)
+        rules["act_kv"] = P(b, None, None)
+        rules["act_btv"] = P(b, None, vocab_tp)
+        rules["moe_ecd"] = P(tp, None, None)
+    return {k: NamedSharding(mesh, v) for k, v in rules.items()}
+
+
+def make_cache_specs(cache, cfg: ModelConfig, info: MeshInfo, batch: int):
+    """KV-cache shardings: buffer dim over ``model``, batch over dp axes."""
+    mesh = info.mesh
+    dp, tp = info.dp_axes, info.tp_axis
+    b = dp if batch % info.dp_size == 0 else (
+        dp[-1:] if batch % int(mesh.shape[dp[-1]]) == 0 else None)
+    if isinstance(b, tuple) and len(b) == 1:
+        b = b[0]
+
+    def one(path_tuple, leaf):
+        name = str(getattr(path_tuple[-1], "key", ""))
+        shape = leaf.shape
+        if name in ("k", "v", "latent", "k_rope"):       # [L,B,buf,...]
+            buf_tp = tp if shape[2] % info.tp_size == 0 else None
+            rest = [None] * (len(shape) - 3)
+            return NamedSharding(mesh, P(None, b, buf_tp, *rest))
+        if name in ("conv", "state", "cross_k", "cross_v"):  # [L,B,...]
+            rest = [None] * (len(shape) - 2)
+            return NamedSharding(mesh, P(None, b, *rest))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

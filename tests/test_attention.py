@@ -1,0 +1,112 @@
+"""Attention-layer unit + property tests: blocked==direct, custom-VJP grads,
+masking semantics, ring-buffer cache addressing, MLA absorbed decode."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models.attention import (
+    _direct_attention, blocked_attention, cache_write_slot, mask_block,
+)
+
+
+def _qkv(key, b, s, hk, g, hd, t=None):
+    t = t or s
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, hk, g, hd)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, hk, hd)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, hk, hd)) * 0.5
+    return q, k, v
+
+
+@given(st.sampled_from([64, 96, 128]), st.sampled_from([16, 32, 64]),
+       st.integers(0, 100))
+@settings(deadline=None, max_examples=12)
+def test_blocked_equals_direct(s, blk, seed):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 2, s, 2, 2, 16)
+    pos = jnp.arange(s)
+    a = blocked_attention(q, k, v, pos, pos, q_block=blk, k_block=blk)
+    b = _direct_attention(q, k, v, pos, pos, 0, 0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_blocked_grads_equal_direct_grads():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 128, 2, 3, 32)
+    pos = jnp.arange(128)
+
+    def lb(q, k, v):
+        return jnp.sum(jnp.sin(blocked_attention(q, k, v, pos, pos,
+                                                 q_block=32, k_block=32)))
+
+    def ld(q, k, v):
+        return jnp.sum(jnp.sin(_direct_attention(q, k, v, pos, pos, 0, 0)))
+
+    g1 = jax.grad(lb, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(ld, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-3, atol=3e-4)
+
+
+def test_mask_semantics():
+    # causal
+    m = mask_block(jnp.arange(4), jnp.arange(4))
+    assert np.array_equal(np.asarray(m), np.tril(np.ones((4, 4), bool)))
+    # window of 2: see self and previous token only
+    m = mask_block(jnp.arange(4), jnp.arange(4), window=2)
+    expect = np.tril(np.ones((4, 4), bool)) & ~np.tril(np.ones((4, 4), bool), -2)
+    assert np.array_equal(np.asarray(m), expect)
+    # meta pinning: position 0 always visible even outside window
+    m = mask_block(jnp.arange(6), jnp.arange(6), window=2, num_meta=1)
+    assert bool(m[5, 0]) and not bool(m[5, 1])
+    # empty slots (pos = -1) never visible
+    m = mask_block(jnp.arange(3), jnp.asarray([-1, 0, 1]))
+    assert not np.any(np.asarray(m)[:, 0])
+    # traced window behaves identically (hybrid per-layer selection)
+    m_tr = jax.jit(lambda w: mask_block(jnp.arange(4), jnp.arange(4), w))(2)
+    m_st = mask_block(jnp.arange(4), jnp.arange(4), 2)
+    assert np.array_equal(np.asarray(m_tr), np.asarray(m_st))
+
+
+def test_cache_write_slot_ring_and_pinned():
+    buf, meta = 8, 2
+    slots = [int(cache_write_slot(buf, i, meta)) for i in range(20)]
+    # meta positions map to themselves
+    assert slots[:2] == [0, 1]
+    # ring region cycles over [2, 8)
+    assert slots[2:8] == [2, 3, 4, 5, 6, 7]
+    assert slots[8:14] == [2, 3, 4, 5, 6, 7]
+    # no-meta full buffer: identity until wrap
+    assert [int(cache_write_slot(4, i, 0)) for i in range(6)] == [0, 1, 2, 3, 0, 1]
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    """Absorbed decode == expanding the latent and running standard attention."""
+    from repro.configs import get_config
+    from repro.models.mla import init_mla, mla_attention
+    cfg = get_config("deepseek-v2-236b").reduced()
+    key = jax.random.PRNGKey(0)
+    p = init_mla(key, cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(key, (B, S + 1, cfg.d_model)) * 0.5
+    pos_full = jnp.broadcast_to(jnp.arange(S + 1), (B, S + 1))
+
+    # ground truth: full-sequence (expanded) attention, last position
+    y_full, _ = mla_attention(p, x, cfg, positions=pos_full)
+
+    # prefill S tokens then absorbed-decode token S
+    buf = S + 1
+    lat = jnp.zeros((B, buf, cfg.kv_lora_rank))
+    kr = jnp.zeros((B, buf, cfg.qk_rope_head_dim))
+    _, (lat, kr) = mla_attention(p, x[:, :S], cfg,
+                                 positions=pos_full[:, :S],
+                                 kv_bufs=(lat, kr))
+    kv_pos = jnp.where(jnp.arange(buf) <= S, jnp.arange(buf), -1)
+    y_dec, _ = mla_attention(p, x[:, S:S + 1], cfg,
+                             positions=jnp.full((B, 1), S),
+                             kv_bufs=(lat, kr), kv_pos=kv_pos,
+                             write_slot=jnp.asarray(S))
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, S]), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,225 @@
+"""FedP2P/FedAvg protocol invariants — unit + hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.aggregation import (
+    cluster_models, cluster_then_global, weighted_average,
+)
+from repro.core.comm_model import (
+    CommParams, h_fedavg, h_fedp2p, min_h_fedp2p, optimal_L, speedup_R,
+)
+from repro.core.partition import random_partition, sample_participants
+from repro.core.straggler import straggler_mask
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=30,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def _stack(arrs):
+    return {"w": jnp.asarray(np.stack(arrs))}
+
+
+# ---------------------------------------------------------------------------
+# weighted_average
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 12), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_weighted_average_convexity(n, dim, seed):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, dim)).astype(np.float32)
+    w = rng.uniform(0.1, 5.0, n).astype(np.float32)
+    out = weighted_average({"w": jnp.asarray(xs)}, jnp.asarray(w))["w"]
+    # convex combination: within [min, max] per coordinate
+    assert np.all(np.asarray(out) <= xs.max(0) + 1e-5)
+    assert np.all(np.asarray(out) >= xs.min(0) - 1e-5)
+    expect = (xs * (w / w.sum())[:, None]).sum(0)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+def test_weighted_average_permutation_invariant(n, seed):
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, 3)).astype(np.float32)
+    w = rng.uniform(0.1, 1.0, n).astype(np.float32)
+    perm = rng.permutation(n)
+    a = weighted_average({"w": jnp.asarray(xs)}, jnp.asarray(w))["w"]
+    b = weighted_average({"w": jnp.asarray(xs[perm])}, jnp.asarray(w[perm]))["w"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_weighted_average_identical_models_fixed_point():
+    xs = np.tile(np.arange(4, dtype=np.float32), (6, 1))
+    out = weighted_average({"w": jnp.asarray(xs)},
+                           jnp.asarray(np.random.rand(6).astype(np.float32)))
+    np.testing.assert_allclose(np.asarray(out["w"]), xs[0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# FedP2P two-stage aggregation
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_cluster_then_global_equals_fedavg_when_L1(L, q, seed):
+    """With one cluster, FedP2P == FedAvg aggregation exactly."""
+    rng = np.random.default_rng(seed)
+    n = q * 1
+    xs = rng.normal(size=(n, 5)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    cids = np.zeros(n, np.int32)
+    a = cluster_then_global({"w": jnp.asarray(xs)}, jnp.asarray(w),
+                            jnp.asarray(cids), 1)["w"]
+    b = weighted_average({"w": jnp.asarray(xs)}, jnp.asarray(w))["w"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(2, 5), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_cluster_then_global_equal_weights(L, q, seed):
+    """Equal data sizes -> FedP2P global = plain mean (since clusters have
+    equal size Q)."""
+    rng = np.random.default_rng(seed)
+    n = L * q
+    xs = rng.normal(size=(n, 3)).astype(np.float32)
+    w = np.ones(n, np.float32)
+    cids = np.repeat(np.arange(L), q).astype(np.int32)
+    out = cluster_then_global({"w": jnp.asarray(xs)}, jnp.asarray(w),
+                              jnp.asarray(cids), L)["w"]
+    np.testing.assert_allclose(np.asarray(out), xs.mean(0), rtol=1e-4, atol=1e-5)
+
+
+def test_cluster_then_global_dead_cluster_excluded():
+    xs = np.stack([np.full(3, 1.0), np.full(3, 3.0)]).astype(np.float32)
+    w = np.ones(2, np.float32)
+    cids = np.array([0, 1], np.int32)
+    mask = jnp.asarray([1.0, 0.0])          # cluster 1 fully dropped
+    out = cluster_then_global({"w": jnp.asarray(xs)}, jnp.asarray(w),
+                              jnp.asarray(cids), 2, mask)["w"]
+    np.testing.assert_allclose(np.asarray(out), np.full(3, 1.0), rtol=1e-5)
+
+
+def test_cluster_models_weighting():
+    xs = np.array([[0.0], [2.0], [10.0], [20.0]], np.float32)
+    w = np.array([1.0, 3.0, 1.0, 1.0], np.float32)
+    cids = np.array([0, 0, 1, 1], np.int32)
+    out = cluster_models({"w": jnp.asarray(xs)}, jnp.asarray(w),
+                         jnp.asarray(cids), 2)["w"]
+    np.testing.assert_allclose(np.asarray(out), [[1.5], [15.0]], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# partitioning / stragglers
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 1000))
+def test_random_partition_properties(L, Q, seed):
+    n = L * Q + 13
+    sel, cids = random_partition(jax.random.PRNGKey(seed), n, L, Q)
+    sel, cids = np.asarray(sel), np.asarray(cids)
+    assert len(np.unique(sel)) == L * Q          # distinct clients
+    assert cids.min() == 0 and cids.max() == L - 1
+    assert np.all(np.bincount(cids, minlength=L) == Q)   # exactly Q each
+
+
+def test_sample_participants_distinct():
+    sel = np.asarray(sample_participants(jax.random.PRNGKey(0), 100, 10))
+    assert len(np.unique(sel)) == 10
+
+
+def test_straggler_mask_rate():
+    m = straggler_mask(jax.random.PRNGKey(0), 10_000, 0.5)
+    assert abs(float(m.mean()) - 0.5) < 0.03
+    assert float(straggler_mask(jax.random.PRNGKey(0), 32, 0.0).mean()) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# communication model (§3.2)
+# ---------------------------------------------------------------------------
+
+@given(st.floats(1.0, 16.0), st.integers(100, 5000), st.floats(50.0, 1000.0))
+def test_optimal_L_minimizes(alpha, P, gamma):
+    p = CommParams(model_bytes=1e8, server_bw=1e9, device_bw=1e9 / gamma,
+                   alpha=alpha)
+    L_star = optimal_L(p, P)
+    h_star = h_fedp2p(p, P, L_star)
+    for L in [L_star * 0.5, L_star * 0.9, L_star * 1.1, L_star * 2.0]:
+        assert h_fedp2p(p, P, L) >= h_star - 1e-9
+
+
+@given(st.floats(1.0, 16.0), st.integers(100, 5000), st.floats(50.0, 1000.0))
+def test_min_h_closed_form(alpha, P, gamma):
+    p = CommParams(model_bytes=1e8, server_bw=1e9, device_bw=1e9 / gamma,
+                   alpha=alpha)
+    np.testing.assert_allclose(min_h_fedp2p(p, P),
+                               h_fedp2p(p, P, optimal_L(p, P)), rtol=1e-9)
+
+
+@given(st.floats(1.0, 16.0), st.integers(100, 5000), st.floats(50.0, 1000.0))
+def test_speedup_R_consistent(alpha, P, gamma):
+    """Eq.(2) == H_avg / min H_p2p."""
+    p = CommParams(model_bytes=1e8, server_bw=1e9, device_bw=1e9 / gamma,
+                   alpha=alpha)
+    np.testing.assert_allclose(speedup_R(p, P),
+                               h_fedavg(p, P) / min_h_fedp2p(p, P), rtol=1e-9)
+
+
+def test_paper_regime_10x():
+    """Paper claim: ~10x at realistic P and gamma (Fig 3 regime)."""
+    p = CommParams(model_bytes=1e8, server_bw=1e9, device_bw=1e9 / 100, alpha=16)
+    assert speedup_R(p, 5000) > 10.0
+    p4 = CommParams(model_bytes=1e8, server_bw=1e9, device_bw=1e9 / 50, alpha=4)
+    assert speedup_R(p4, 5000) > 10.0
+    # FedAvg can win when P is small or device bw is terrible (paper §4.4)
+    p_bad = CommParams(model_bytes=1e8, server_bw=1e9, device_bw=1e9 / 2000,
+                       alpha=1)
+    assert speedup_R(p_bad, 50) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# additional invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 5), st.integers(2, 4), st.integers(0, 2 ** 31 - 1))
+def test_fedp2p_scale_equivariance(L, q, seed):
+    """Aggregation commutes with scalar scaling of all client models."""
+    rng = np.random.default_rng(seed)
+    n = L * q
+    xs = rng.normal(size=(n, 4)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    cids = np.repeat(np.arange(L), q).astype(np.int32)
+    a = cluster_then_global({"w": jnp.asarray(xs * 3.0)}, jnp.asarray(w),
+                            jnp.asarray(cids), L)["w"]
+    b = cluster_then_global({"w": jnp.asarray(xs)}, jnp.asarray(w),
+                            jnp.asarray(cids), L)["w"]
+    np.testing.assert_allclose(np.asarray(a), 3.0 * np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(2, 5), st.integers(2, 4), st.integers(0, 2 ** 31 - 1))
+def test_fedp2p_within_cluster_permutation_invariant(L, q, seed):
+    """Shuffling clients WITHIN clusters leaves the global model unchanged."""
+    rng = np.random.default_rng(seed)
+    n = L * q
+    xs = rng.normal(size=(n, 3)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    cids = np.repeat(np.arange(L), q).astype(np.int32)
+    perm = np.concatenate([c * q + rng.permutation(q) for c in range(L)])
+    a = cluster_then_global({"w": jnp.asarray(xs)}, jnp.asarray(w),
+                            jnp.asarray(cids), L)["w"]
+    b = cluster_then_global({"w": jnp.asarray(xs[perm])}, jnp.asarray(w[perm]),
+                            jnp.asarray(cids[perm]), L)["w"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-5)
+
+
+@given(st.floats(1.0, 16.0), st.floats(50.0, 1000.0))
+def test_speedup_monotone_in_P(alpha, gamma):
+    """Eq.(2): R increases with the number of sampled devices (paper §3.2)."""
+    p = CommParams(model_bytes=1e8, server_bw=1e9, device_bw=1e9 / gamma,
+                   alpha=alpha)
+    rs = [speedup_R(p, P) for P in (100, 500, 1000, 5000)]
+    assert all(rs[i] < rs[i + 1] for i in range(len(rs) - 1))
