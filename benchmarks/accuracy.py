@@ -1,4 +1,6 @@
-"""Table 1 + Fig 2: FedP2P vs FedAvg test accuracy on the five datasets.
+"""Table 1 + Fig 2: test accuracy of every registered protocol on the five
+datasets (FedP2P vs FedAvg are the paper's rows; gossip and topology-aware
+FedP2P ride along via the ``repro.protocols`` registry).
 
 Offline stand-ins preserve the paper's partition statistics (DESIGN.md §3);
 the claim validated is the RELATIONSHIP (FedP2P >= FedAvg at equal global
@@ -11,6 +13,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import (
     CNN_FEMNIST, LOGREG_MNIST, LOGREG_SYN, LSTM_SHAKES,
@@ -42,6 +45,7 @@ def _datasets(quick: bool) -> Dict:
 def run(quick: bool = True, rounds: int = 0, verbose: bool = False):
     rows = []
     curves = {}
+    algos = list(protocols.names())
     for name, (net, data) in _datasets(quick).items():
         R = rounds or (15 if quick else 60)
         epochs = 5 if quick else 20
@@ -50,17 +54,24 @@ def run(quick: bool = True, rounds: int = 0, verbose: bool = False):
                       local_epochs=epochs, batch_size=10,
                       lr=0.5 if net.kind == "lstm" else 0.05)
         sim = Simulator(net, data, fl)
-        h_avg = sim.run(rounds=R, algorithm="fedavg", seed=0, verbose=verbose)
-        h_p2p = sim.run(rounds=R, algorithm="fedp2p", seed=0, verbose=verbose)
+        hists = {a: sim.run(rounds=R, algorithm=a, seed=0, verbose=verbose)
+                 for a in algos}
+        h_avg, h_p2p = hists["fedavg"], hists["fedp2p"]
         rows.append((f"table1/{name}/fedp2p_best_acc", h_p2p.best_acc,
                      f"fedavg={h_avg.best_acc:.4f}"))
+        for a in algos:
+            if a in ("fedavg", "fedp2p"):
+                continue
+            rows.append((f"table1/{name}/{a}_best_acc", hists[a].best_acc,
+                         f"fedp2p={h_p2p.best_acc:.4f}"))
         # Fig 2 smoothness: std of round-to-round accuracy deltas
         d_p2p = float(np.std(np.diff(h_p2p.acc))) if len(h_p2p.acc) > 2 else 0.0
         d_avg = float(np.std(np.diff(h_avg.acc))) if len(h_avg.acc) > 2 else 0.0
         rows.append((f"fig2/{name}/smoothness_std_p2p", d_p2p,
                      f"fedavg_std={d_avg:.4f}"))
-        curves[name] = {"fedp2p": h_p2p.acc, "fedavg": h_avg.acc,
-                        "loss_p2p": h_p2p.train_loss, "loss_avg": h_avg.train_loss}
+        curves[name] = {a: hists[a].acc for a in algos}
+        curves[name].update({"loss_p2p": h_p2p.train_loss,
+                             "loss_avg": h_avg.train_loss})
     return rows, curves
 
 

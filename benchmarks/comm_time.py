@@ -1,12 +1,16 @@
 """Fig 3: normalized communication time, FedP2P (at optimal L) vs FedAvg,
 swept over sampled devices P, bandwidth ratio gamma, and asymmetry alpha —
 the paper's closed-form model instantiated exactly (§3.2 / §4.4), plus the
-TPU-pod instantiation from DESIGN.md §3."""
+TPU-pod instantiation from DESIGN.md §3. Per-protocol H(·) rows dispatch
+through ``repro.protocols`` — every registered strategy prices its own
+round."""
 from __future__ import annotations
 
+from repro import protocols
 from repro.core.comm_model import (
     CommParams, h_fedavg, min_h_fedp2p, optimal_L, speedup_R, tpu_comm_params,
 )
+from repro.core.topology import make_topology
 
 MODEL_BYTES = 100e6          # 100 MB model (typical of the paper's regime)
 SERVER_BW = 1e9              # 1 Gb/s-ish server
@@ -36,6 +40,17 @@ def run(quick: bool = True):
     for P in (16, 32, 256):
         rows.append((f"fig3/tpu_pod/P{P}/speedup_R", speedup_R(tpu, P),
                      f"L*={optimal_L(tpu, P):.1f}"))
+    # per-protocol round cost through the registry (same paper regime)
+    p = CommParams(MODEL_BYTES, SERVER_BW, SERVER_BW / 100, alpha=4)
+    topo = make_topology(256, grid=8, seed=0)
+    for P in (100, 1000):
+        h_ref = protocols.get("fedavg").comm_time(p, P)
+        for name in protocols.names():
+            proto = protocols.get(name)
+            h = proto.comm_time(p, P,
+                                topology=topo if proto.needs_topology else None)
+            rows.append((f"fig3/protocols/{name}/P{P}/h_seconds", h,
+                         f"vs_fedavg={h_ref / max(h, 1e-12):.2f}x"))
     return rows
 
 

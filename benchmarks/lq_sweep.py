@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import LOGREG_MNIST
 from repro.core.simulator import Simulator
@@ -13,6 +14,7 @@ from repro.data.federated import pseudo_mnist_federated
 
 def run(quick: bool = True):
     rows = []
+    p2p = protocols.get("fedp2p").name     # registry-validated dispatch
     data = pseudo_mnist_federated(150 if quick else 1000, seed=0)
     R = 12 if quick else 40
     accs = []
@@ -22,7 +24,7 @@ def run(quick: bool = True):
                       devices_per_cluster=2, local_epochs=5, batch_size=10,
                       lr=0.05)
         h = Simulator(LOGREG_MNIST, data, fl).run(rounds=R,
-                                                  algorithm="fedp2p", seed=0)
+                                                  algorithm=p2p, seed=0)
         accs.append(h.best_acc)
         rows.append((f"fig5a/L{L}_Q2/best_acc", h.best_acc, ""))
     rows.append(("fig5a/spread_across_L", float(np.max(accs) - np.min(accs)),
@@ -34,7 +36,7 @@ def run(quick: bool = True):
                       devices_per_cluster=Q, local_epochs=5, batch_size=10,
                       lr=0.05)
         h = Simulator(LOGREG_MNIST, data, fl).run(rounds=R,
-                                                  algorithm="fedp2p", seed=0)
+                                                  algorithm=p2p, seed=0)
         accs.append(h.best_acc)
         rows.append((f"fig5b/L{L}_Q{Q}/best_acc", h.best_acc, "P=20"))
     rows.append(("fig5b/spread_across_LQ", float(np.max(accs) - np.min(accs)),

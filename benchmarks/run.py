@@ -1,11 +1,14 @@
 """Benchmark harness: one module per paper table/figure (+roofline/kernels).
 
 Prints ``name,value,derived`` CSV per row. ``--full`` runs the paper-scale
-configurations (slower); default is the quick CI-sized pass.
+configurations (slower); default is the quick CI-sized pass. ``--json PATH``
+additionally dumps the rows to a ``BENCH_*.json``-style file so successive
+PRs accumulate a perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,6 +18,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names (e.g. accuracy,roofline)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump rows to a BENCH_*.json-style file")
     args = ap.parse_args(argv)
     quick = not args.full
 
@@ -31,9 +36,13 @@ def main(argv=None) -> None:
         "roofline": lambda: roofline.run(quick=quick),      # deliverable (g)
     }
     only = set(args.only.split(",")) if args.only else None
+    if only and not only <= set(modules):
+        ap.error(f"unknown module(s) {sorted(only - set(modules))}; "
+                 f"available: {', '.join(modules)}")
 
     print("name,value,derived")
     failures = []
+    records = []
     for name, fn in modules.items():
         if only and name not in only:
             continue
@@ -41,10 +50,20 @@ def main(argv=None) -> None:
         try:
             for row_name, val, derived in fn():
                 print(f"{row_name},{val:.6g},{derived}")
-            print(f"_meta/{name}/seconds,{time.time()-t0:.1f},")
+                records.append({"module": name, "name": row_name,
+                                "value": float(val), "derived": derived})
+            dt = time.time() - t0
+            print(f"_meta/{name}/seconds,{dt:.1f},")
+            records.append({"module": name, "name": f"_meta/{name}/seconds",
+                            "value": round(dt, 1), "derived": ""})
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             print(f"_meta/{name}/FAILED,0,{e!r}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": quick, "rows": records,
+                       "failures": [{"module": m, "error": e}
+                                    for m, e in failures]}, f, indent=1)
     if failures:
         sys.exit(1)
 

@@ -1,9 +1,12 @@
 """Fig 4: accuracy under 50% stragglers — FedP2P keeps its accuracy, FedAvg
-degrades and oscillates (max round-to-round jump)."""
+degrades and oscillates (max round-to-round jump). Gossip rides along via
+the registry: purely pairwise mixing has no aggregation bottleneck to
+straggle."""
 from __future__ import annotations
 
 import numpy as np
 
+from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import LOGREG_MNIST, LOGREG_SYN
 from repro.core.simulator import Simulator
@@ -20,8 +23,9 @@ def run(quick: bool = True, rate: float = 0.5):
     }
     R = 15 if quick else 50
     seeds = (0, 1)
+    algos = [protocols.get(a).name for a in ("fedp2p", "fedavg", "gossip")]
     for name, (net, data) in datasets.items():
-        for algo in ("fedp2p", "fedavg"):
+        for algo in algos:
             accs = {}
             for r in (0.0, rate):
                 # fair comparison: both algorithms sample P = L*Q = 20

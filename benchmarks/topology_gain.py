@@ -1,35 +1,41 @@
-"""§5 extension: topology-aware cluster formation. By the principle of
-deferred decisions the assignment is accuracy-neutral; the win is
-communication time. We measure ring-allreduce time per cluster under random
-vs hop-aware grouping on a simulated device lattice."""
+"""§5 extension: topology-aware cluster formation through the protocols API.
+By the principle of deferred decisions the assignment is accuracy-neutral;
+the win is communication time. We compare the slowest cluster's
+ring-allreduce time under ``fedp2p`` (random partition) vs ``fedp2p_topo``
+(hop-aware partition) on a simulated device lattice, plus the two
+protocols' analytic ``comm_time``."""
 from __future__ import annotations
 
+import jax
 import numpy as np
 
-from repro.core.topology import (
-    cluster_comm_time, grid_cluster_assignment, make_topology,
-)
+from repro import protocols
+from repro.config import FLConfig
+from repro.core.comm_model import CommParams
+from repro.core.topology import cluster_comm_time, make_topology
 
 MODEL_BYTES = 100e6
+
+
+def _slowest_cluster(topo, sel, ids, L):
+    return max(cluster_comm_time(topo, sel[ids == c], MODEL_BYTES)
+               for c in range(L))
 
 
 def run(quick: bool = True):
     rows = []
     n, L, Q = (200, 10, 10) if quick else (1000, 25, 20)
     topo = make_topology(n, grid=8, seed=0)
-    rng = np.random.default_rng(0)
+    fl = FLConfig(num_clients=n, num_clusters=L, devices_per_cluster=Q)
+    p_rand = protocols.get("fedp2p")
+    p_topo = protocols.get("fedp2p_topo")
     times_rand, times_topo = [], []
     for trial in range(5):
-        sel = rng.permutation(n)[: L * Q]
-        # random contiguous clusters
-        rand_ids = np.repeat(np.arange(L), Q)
-        t_rand = max(cluster_comm_time(topo, sel[rand_ids == c], MODEL_BYTES)
-                     for c in range(L))
-        ids = grid_cluster_assignment(topo, sel, L)
-        t_topo = max(cluster_comm_time(topo, sel[ids == c], MODEL_BYTES)
-                     for c in range(L))
-        times_rand.append(t_rand)
-        times_topo.append(t_topo)
+        key = jax.random.PRNGKey(trial)
+        sel_r, ids_r = map(np.asarray, p_rand.partition(key, fl))
+        times_rand.append(_slowest_cluster(topo, sel_r, ids_r, L))
+        sel_t, ids_t = map(np.asarray, p_topo.partition(key, fl, topo))
+        times_topo.append(_slowest_cluster(topo, sel_t, ids_t, L))
     rows.append(("topology/random_cluster_allreduce_s",
                  float(np.mean(times_rand)), "slowest cluster, mean of 5"))
     rows.append(("topology/hop_aware_cluster_allreduce_s",
@@ -37,6 +43,14 @@ def run(quick: bool = True):
     rows.append(("topology/speedup",
                  float(np.mean(times_rand) / np.mean(times_topo)),
                  "paper §5: grouping by hops benefits comm efficiency"))
+    # the same gain through the §3.2 cost interface
+    p = CommParams(MODEL_BYTES, server_bw=1e9, device_bw=25e6, alpha=1.0)
+    P = L * Q
+    rows.append(("topology/comm_time/fedp2p_analytic_s",
+                 p_rand.comm_time(p, P, L=L), f"L={L}"))
+    rows.append(("topology/comm_time/fedp2p_topo_s",
+                 p_topo.comm_time(p, P, L=L, topology=topo),
+                 "slowest hop-aware cluster + server term"))
     return rows
 
 

@@ -1,7 +1,14 @@
-"""Quickstart: FedP2P vs FedAvg on SynCov (paper §4.1) in ~1 minute on CPU.
+"""Quickstart: every registered protocol on SynCov (paper §4.1) in a couple
+of minutes on CPU — FedAvg (Algo 1), FedP2P (Algo 2), decentralized gossip
+(the no-server limit), and topology-aware FedP2P (§5).
 
     PYTHONPATH=src python examples/quickstart.py
+
+Adding your own strategy is one file: subclass ``repro.protocols.Protocol``,
+call ``repro.protocols.register(...)``, and it shows up in this loop, in the
+simulator, on the production mesh, and in every benchmark.
 """
+from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import LOGREG_SYN
 from repro.core.comm_model import CommParams, optimal_L, speedup_R
@@ -20,17 +27,22 @@ def main():
                   participation=10, local_epochs=10, batch_size=10, lr=0.05)
     sim = Simulator(LOGREG_SYN, data, fl)
 
-    print("== FedAvg (Algo 1) ==")
-    h_avg = sim.run(rounds=15, algorithm="fedavg", seed=0, verbose=True)
-    print("== FedP2P (Algo 2) ==")
-    h_p2p = sim.run(rounds=15, algorithm="fedp2p", seed=0, verbose=True)
-    print(f"\nbest accuracy: FedP2P={h_p2p.best_acc:.4f} "
-          f"FedAvg={h_avg.best_acc:.4f}")
+    best = {}
+    for name in protocols.names():
+        print(f"== {name} ==")
+        best[name] = sim.run(rounds=15, algorithm=name, seed=0,
+                             verbose=True).best_acc
+    print("\nbest accuracy: "
+          + " ".join(f"{n}={a:.4f}" for n, a in best.items()))
 
-    # --- communication model (§3.2): when does FedP2P win? ---
+    # --- communication model (§3.2): what does each round cost? ---
     p = CommParams(model_bytes=100e6, server_bw=1e9, device_bw=1e7, alpha=4)
-    print(f"\ncomm model @P=1000: optimal L*={optimal_L(p, 1000):.1f}, "
-          f"speedup R={speedup_R(p, 1000):.2f}x over FedAvg")
+    P = 1000
+    print(f"\ncomm model @P={P}: optimal L*={optimal_L(p, P):.1f}, "
+          f"speedup R={speedup_R(p, P):.2f}x over FedAvg")
+    for name in protocols.names():
+        proto = protocols.get(name)
+        print(f"  H_{name}(P={P}) = {proto.comm_time(p, P):.1f}s")
 
 
 if __name__ == "__main__":

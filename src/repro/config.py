@@ -213,8 +213,12 @@ class FLConfig:
     straggler_rate: float = 0.0      # fraction of selected devices that drop
     sync_period: int = 1             # global sync every k rounds (1 = paper)
     seed: int = 0
-    algorithm: str = "fedp2p"        # fedp2p | fedavg
-    topology_aware: bool = False     # §5: group clusters by hop distance
+    # any repro.protocols registry name (fedavg | fedp2p | gossip |
+    # fedp2p_topo | ...); validated at dispatch — unknown names raise
+    algorithm: str = "fedp2p"
+    # §5: upgrade the algorithm to its "_topo" hop-aware variant when one
+    # is registered (fedp2p -> fedp2p_topo)
+    topology_aware: bool = False
 
 
 # ---------------------------------------------------------------------------

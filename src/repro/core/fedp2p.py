@@ -1,18 +1,17 @@
-"""FedP2P as a production distributed program (the TPU-native adaptation).
+"""Federated rounds as a production distributed program (TPU-native).
 
 Mapping (DESIGN.md §3): each slice of the ``data`` mesh axis hosts one
 *client group* with its own model replica and local data shard. One jitted
-``fedp2p_round``:
+``round_fn``:
 
   1. local training  — ``vmap`` over the client axis (sharded over ``data``):
      E·steps of SGD per client with NO cross-client communication (the vmap
      keeps every op client-diagonal, so GSPMD emits zero collectives here);
-  2. P2P sync        — clusters are contiguous groups of Q_dev clients along
-     the ``data`` axis; the weighted within-cluster average lowers to
-     group-limited all-reduces on intra-pod ICI (the paper's Allreduce);
-  3. global sync     — every ``sync_period`` rounds, mean over cluster
-     models: the only traffic that crosses the ``pod`` boundary (DCN),
-     mirroring the paper's thin server link.
+  2. protocol mixing — dispatched through ``repro.protocols``: on a real
+     mesh the protocol's ``psum_mix`` shard_map lowering runs (grouped
+     intra-cluster allreduces on ICI, global allreduce / pairwise exchange
+     for the server / gossip step); without a mesh the protocol's dense
+     [D, D] ``mixing_matrix`` oracle form runs instead.
 
 Federated state: every param leaf gains a leading client axis [D, ...]
 sharded ``P(dp_axes)`` — per-device memory equals one replica. This entry
@@ -22,11 +21,12 @@ architectures whose single replica fits one chip (the FL regime).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import protocols
 from repro.config import FLConfig
 from repro.models.model import Model
 
@@ -37,15 +37,9 @@ def broadcast_to_clients(params, num_clients_dev: int):
         lambda p: jnp.broadcast_to(p[None], (num_clients_dev,) + p.shape), params)
 
 
-def cluster_ids_for(num_clients_dev: int, num_clusters: int) -> jnp.ndarray:
-    assert num_clients_dev % num_clusters == 0
-    q = num_clients_dev // num_clusters
-    return jnp.repeat(jnp.arange(num_clusters, dtype=jnp.int32), q)
-
-
 def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
                          local_steps: int,
-                         algorithm: str = "fedp2p",
+                         algorithm: str = "",
                          remat: bool = True,
                          out_shardings=None,
                          mesh_info=None) -> Callable:
@@ -54,12 +48,16 @@ def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
 
     f_params: pytree, leaves [D, ...]. batches: pytree, leaves
     [D, local_steps, ...] (e.g. tokens [D, T, B_loc, S]). survive: [D] 0/1
-    straggler mask. do_global_sync: static python bool.
+    straggler mask. do_global_sync: static python bool. ``algorithm`` is any
+    ``repro.protocols`` registry name (default: fl.algorithm) — unknown
+    names raise ValueError.
     """
+    proto = protocols.get(algorithm or fl.algorithm)
     D = num_clients_dev
-    L = fl.num_clusters
-    assert D % L == 0, (D, L)
-    Q = D // L
+    cluster_ids_np = proto.mesh_cluster_ids(D, fl)
+    num_clusters = int(cluster_ids_np.max()) + 1
+    cluster_ids = jnp.asarray(cluster_ids_np)
+    unit_counts = jnp.ones((D,), jnp.float32)
 
     def local_train(params, batches):
         def step(p, b):
@@ -75,98 +73,6 @@ def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
 
     vlocal = jax.vmap(local_train)
 
-    cluster_onehot = jax.nn.one_hot(cluster_ids_for(D, L), L,
-                                    dtype=jnp.float32)          # [D, L]
-
-    def _mix_matrices(survive, do_global_sync: bool):
-        """(M_new, M_old): f_out = M_new @ f_new + M_old @ f_old.
-
-        Expressing the protocol as a [D, D] client-mixing matrix keeps every
-        leaf sharded along the client axis end-to-end: the contraction over
-        the (data-sharded) client dim lowers to exactly the within-cluster /
-        global allreduce traffic the paper analyzes — no replication.
-        """
-        s = survive.astype(jnp.float32)                         # [D]
-        C = cluster_onehot
-        if algorithm == "fedavg":
-            coef = s / jnp.maximum(jnp.sum(s), 1e-9)
-            M_new = jnp.broadcast_to(coef[None], (D, D))
-            return M_new, jnp.zeros((D, D), jnp.float32)
-        denom = jnp.maximum(C.T @ s, 1e-9)                      # [L]
-        alive = (C.T @ s > 0).astype(jnp.float32)               # [L]
-        # gamma_j = s_j / denom_{c(j)} (within-cluster weights)
-        gamma = s * (C @ (1.0 / denom))                         # [D]
-        if do_global_sync:
-            n_alive = jnp.maximum(jnp.sum(alive), 1.0)
-            coef = gamma * (C @ alive) / n_alive                # [D]
-            M_new = jnp.broadcast_to(coef[None], (D, D))
-            # all clusters dead -> keep old params (uniform mean of old)
-            all_dead = (jnp.sum(alive) == 0).astype(jnp.float32)
-            M_old = all_dead * jnp.full((D, D), 1.0 / D)
-            return M_new, M_old
-        # cluster-local sync: M[i,j] = [c(i)=c(j)] gamma_j; dead clusters
-        # fall back to the mean of their members' OLD params.
-        same = C @ C.T                                          # [D, D]
-        M_new = same * gamma[None, :]
-        dead_row = (C @ (1.0 - alive))                          # [D] in dead cl.
-        M_old = same * (dead_row[:, None] * (1.0 / Q))
-        return M_new, M_old
-
-    def _mix(M_new, M_old, f_new, f_old):
-        def leaf(new, old):
-            flat_n = new.reshape(D, -1).astype(jnp.float32)
-            out = M_new @ flat_n
-            flat_o = old.reshape(D, -1).astype(jnp.float32)
-            out = out + M_old @ flat_o
-            return out.reshape(new.shape).astype(new.dtype)
-        return jax.tree.map(leaf, f_new, f_old)
-
-    # ------------------------------------------------------------------
-    # Hierarchical grouped-psum mixing (production mesh): the literal
-    # realization of the paper's protocol — within-cluster Allreduce
-    # (psum with axis_index_groups) + global Allreduce for the server
-    # step. O(leaf) memory per device vs the O(D·leaf) gather the dense
-    # [D,D] mix degenerates to under GSPMD (§Perf pair 3).
-    # ------------------------------------------------------------------
-    def _mix_hierarchical(f_new, f_old, survive, do_global_sync: bool):
-        from jax.sharding import PartitionSpec as P
-        info = mesh_info
-        axes = info.dp_axes if len(info.dp_axes) > 1 else info.dp_axes[0]
-        names = info.dp_axes
-        groups = [list(range(c * Q, (c + 1) * Q)) for c in range(L)]
-
-        def local_fn(x_new, x_old, s):
-            s = s.reshape(())                       # this client's survival
-            denom = jax.lax.psum(s, names, axis_index_groups=groups)
-            gamma = jnp.where(denom > 0, s / jnp.maximum(denom, 1e-9), 0.0)
-            alive = (denom > 0).astype(jnp.float32)
-            n_alive = jax.lax.psum(alive / Q, names)    # each cluster Q times
-            n_alive = jnp.maximum(n_alive, 1.0)
-
-            def leaf(new, old):
-                nf = new.astype(jnp.float32)
-                cl = jax.lax.psum(gamma * nf, names, axis_index_groups=groups)
-                cl_old = jax.lax.psum(old.astype(jnp.float32) / Q, names,
-                                      axis_index_groups=groups)
-                cl = jnp.where(alive > 0, cl, cl_old)
-                if algorithm == "fedavg":
-                    tot = jax.lax.psum(s, names)
-                    g = jax.lax.psum(jnp.where(tot > 0, s / jnp.maximum(tot, 1e-9), 1.0 / D) * nf, names)
-                    return g.astype(new.dtype)
-                if do_global_sync:
-                    g = jax.lax.psum(cl * (alive / Q), names) / n_alive
-                    return g.astype(new.dtype)
-                return cl.astype(new.dtype)
-
-            return jax.tree.map(leaf, x_new, x_old)
-
-        spec = jax.tree.map(lambda _: P(axes), f_new)
-        sspec = P(axes)
-        fn = jax.shard_map(local_fn, mesh=info.mesh,
-                           in_specs=(spec, spec, sspec),
-                           out_specs=spec, check_vma=False)
-        return fn(f_new, f_old, survive)
-
     jit_kwargs = {"static_argnames": ("do_global_sync",)}
     if out_shardings is not None:
         jit_kwargs["out_shardings"] = out_shardings
@@ -175,10 +81,14 @@ def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
     def round_fn(f_params, batches, survive, do_global_sync: bool = True):
         f_new, losses = vlocal(f_params, batches)
         if mesh_info is not None:
-            f_out = _mix_hierarchical(f_new, f_params, survive, do_global_sync)
+            f_out = proto.psum_mix(f_new, f_params, survive, do_global_sync,
+                                   mesh_info=mesh_info,
+                                   cluster_ids=cluster_ids_np)
         else:
-            M_new, M_old = _mix_matrices(survive, do_global_sync)
-            f_out = _mix(M_new, M_old, f_new, f_params)
+            M_new, M_old = proto.mixing_matrix(survive, unit_counts,
+                                               cluster_ids, do_global_sync,
+                                               num_clusters=num_clusters)
+            f_out = proto.apply_mixing(M_new, M_old, f_new, f_params)
         return f_out, jnp.mean(losses)
 
     return round_fn

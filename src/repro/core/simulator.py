@@ -2,27 +2,28 @@
 
 Runs N clients with the paper's own model classes (§4.2) on CPU. Client-local
 SGD (E epochs, batch O, lr eta) is ``vmap``-ed over all participants of a
-round; aggregation is the exact Algo-1 (FedAvg) / Algo-2 (FedP2P) operator
-from ``core.aggregation``. Everything inside a round is one jitted program.
+round; aggregation is whatever ``repro.protocols`` strategy the round runs:
+the protocol supplies its participant selection, its cluster formation, and
+its dense [P, P] mixing matrices (the oracle form of the same operator the
+production mesh lowers to grouped psums). Everything inside a round is one
+jitted program.
 
 This layer produces the paper's Table 1 / Figs 2, 4, 5 analogues
 (see benchmarks/).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import PaperNetConfig
-from repro.core.aggregation import cluster_models, cluster_then_global, weighted_average
-from repro.core.partition import random_partition, sample_participants
 from repro.core.straggler import straggler_mask
+from repro.core.topology import Topology, make_topology
 from repro.data.federated import FederatedDataset
 from repro.models.paper_nets import (
     init_paper_net, paper_net_accuracy, paper_net_loss,
@@ -78,50 +79,53 @@ def _gather_clients(data_dev, sel):
             jnp.take(data_dev["counts"], sel, axis=0))
 
 
-def make_round_fns(net: PaperNetConfig, fl: FLConfig, data_dev: Dict):
+def make_protocol_round(net: PaperNetConfig, fl: FLConfig, data_dev: Dict,
+                        proto: protocols.Protocol,
+                        topology: Optional[Topology] = None):
+    """One jitted global round of ``proto``:
+
+      1. partition  — the protocol picks P participants and their clusters;
+      2. local SGD  — vmapped over participants;
+      3. mixing     — the protocol's dense (M_new, M_old) form; with
+         ``sync_period > 1`` intermediate sub-rounds mix WITHOUT the global
+         step (cluster-local for FedP2P, a no-op distinction for FedAvg);
+      4. collapse   — the reported global model is the mean over the mixed
+         client models (exact for server protocols, whose rows agree; the
+         standard consensus-average readout for gossip).
+    """
     local_train = make_local_trainer(net, fl)
     vtrain = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))
     vtrain_per = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0))
+    P = proto.num_participants(fl)
+    L = proto.num_clusters(fl)
 
     @jax.jit
-    def fedavg_round(params, key):
+    def round_fn(params, key):
         k_sel, k_tr, k_str = jax.random.split(key, 3)
-        P = fl.participation
-        sel = sample_participants(k_sel, fl.num_clients, P)
+        sel, cids = proto.partition(k_sel, fl, topology)
         cx, cy, cm, counts = _gather_clients(data_dev, sel)
-        trained, losses = vtrain(params, cx, cy, cm,
-                                 jax.random.split(k_tr, P))
         smask = straggler_mask(k_str, P, fl.straggler_rate)
-        new_params = weighted_average(trained, counts, smask)
-        return new_params, jnp.mean(losses)
+        old = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (P,) + p.shape), params)
 
-    @jax.jit
-    def fedp2p_round(params, key):
-        """One global round: partition into L P2P networks, train, Allreduce
-        within clusters (possibly several p2p sub-rounds), global average."""
-        k_sel, k_tr, k_str = jax.random.split(key, 3)
-        L, Q = fl.num_clusters, fl.devices_per_cluster
-        sel, cids = random_partition(k_sel, fl.num_clients, L, Q)
-        cx, cy, cm, counts = _gather_clients(data_dev, sel)
-        smask = straggler_mask(k_str, L * Q, fl.straggler_rate)
-
-        # paper's fair comparison: one round of training inside each P2P
-        # network per global round (sync_period>1 adds extra local rounds).
-        client_params = None
-        losses = jnp.zeros(())
+        client_params, losses = None, jnp.zeros(())
         for r in range(max(1, fl.sync_period)):
-            kr = jax.random.fold_in(k_tr, r)
-            keys = jax.random.split(kr, L * Q)
+            keys = jax.random.split(jax.random.fold_in(k_tr, r), P)
             if client_params is None:
                 client_params, losses = vtrain(params, cx, cy, cm, keys)
             else:
-                cm_models = cluster_models(client_params, counts, cids, L, smask)
-                start = jax.tree.map(lambda p: jnp.take(p, cids, axis=0), cm_models)
+                M_new, M_old = proto.mixing_matrix(
+                    smask, counts, cids, False, num_clusters=L)
+                start = proto.apply_mixing(M_new, M_old, client_params, old)
                 client_params, losses = vtrain_per(start, cx, cy, cm, keys)
-        new_params = cluster_then_global(client_params, counts, cids, L, smask)
+
+        M_new, M_old = proto.mixing_matrix(smask, counts, cids, True,
+                                           num_clusters=L)
+        mixed = proto.apply_mixing(M_new, M_old, client_params, old)
+        new_params = jax.tree.map(lambda x: jnp.mean(x, axis=0), mixed)
         return new_params, jnp.mean(losses)
 
-    return fedavg_round, fedp2p_round
+    return round_fn
 
 
 # ---------------------------------------------------------------------------
@@ -162,8 +166,10 @@ class History:
 
 
 class Simulator:
-    def __init__(self, net: PaperNetConfig, data: FederatedDataset, fl: FLConfig):
+    def __init__(self, net: PaperNetConfig, data: FederatedDataset,
+                 fl: FLConfig, topology: Optional[Topology] = None):
         self.net, self.fl = net, fl
+        self.topology = topology
         self.data_dev = {
             "x": jnp.asarray(data.x), "y": jnp.asarray(data.y),
             "mask": jnp.asarray(data.mask),
@@ -171,19 +177,30 @@ class Simulator:
             "test_x": jnp.asarray(data.test_x), "test_y": jnp.asarray(data.test_y),
             "test_mask": jnp.asarray(data.test_mask),
         }
-        if net.kind == "cnn" and self.data_dev["x"].ndim == 3:
-            pass
-        self.fedavg_round, self.fedp2p_round = make_round_fns(net, fl, self.data_dev)
+        self._round_fns: Dict[str, callable] = {}
         self.evaluate = make_evaluator(net, self.data_dev)
 
     def init_params(self, seed: int = 0):
         return init_paper_net(jax.random.PRNGKey(seed), self.net)
 
+    def _round_fn(self, algorithm: str):
+        """Registry dispatch — unknown names raise ValueError listing the
+        registered protocols (never a silent FedAvg fallback)."""
+        proto = protocols.resolve(algorithm,
+                                  topology_aware=self.fl.topology_aware)
+        if proto.name not in self._round_fns:
+            if proto.needs_topology and self.topology is None:
+                self.topology = make_topology(self.fl.num_clients,
+                                              seed=self.fl.seed)
+            self._round_fns[proto.name] = make_protocol_round(
+                self.net, self.fl, self.data_dev, proto, self.topology)
+        return self._round_fns[proto.name]
+
     def run(self, rounds: int = 0, algorithm: str = "", seed: int = 0,
             eval_every: int = 1, verbose: bool = False) -> History:
         rounds = rounds or self.fl.rounds
         algorithm = algorithm or self.fl.algorithm
-        round_fn = self.fedp2p_round if algorithm == "fedp2p" else self.fedavg_round
+        round_fn = self._round_fn(algorithm)
         params = self.init_params(seed)
         key = jax.random.PRNGKey(seed + 1)
         hist = History()

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import protocols
 from repro.checkpoint import save_checkpoint
 from repro.config import FLConfig, TrainConfig
 from repro.configs import get_config
@@ -73,11 +74,13 @@ def run_federated_training(arch: str, *, rounds: int = 20,
                            sync_period: int = 1, straggler_rate: float = 0.0,
                            lr: float = 5e-3, seed: int = 0,
                            verbose: bool = True) -> Dict:
-    """Paper protocol over LM clients with heterogeneous token streams."""
+    """Paper protocol over LM clients with heterogeneous token streams.
+    ``algorithm`` is any ``repro.protocols`` registry name."""
     cfg = get_config(arch).reduced(num_layers=2, max_d_model=128)
     model = build_model(cfg)
     fl = FLConfig(num_clusters=num_clusters, lr=lr,
-                  straggler_rate=straggler_rate, sync_period=sync_period)
+                  straggler_rate=straggler_rate, sync_period=sync_period,
+                  algorithm=protocols.get(algorithm).name)
     round_fn = make_federated_round(model, fl, num_clients, local_steps,
                                     algorithm=algorithm)
     params = model.init(jax.random.PRNGKey(seed))
@@ -110,7 +113,8 @@ def main():
     ap.add_argument("--mode", choices=("lm", "federated"), default="lm")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--algorithm", default="fedp2p")
+    ap.add_argument("--algorithm", default="fedp2p",
+                    choices=protocols.names())
     ap.add_argument("--straggler-rate", type=float, default=0.0)
     ap.add_argument("--full", action="store_true", help="full (unreduced) config")
     ap.add_argument("--ckpt-dir", default=None)

@@ -1,0 +1,31 @@
+"""repro.protocols — the pluggable decentralization-strategy registry.
+
+    proto = protocols.get("fedp2p")
+    sel, cids = proto.partition(key, fl)
+    M_new, M_old = proto.mixing_matrix(survive, counts, cids, True,
+                                       num_clusters=fl.num_clusters)
+    seconds = proto.comm_time(comm_params, P)
+
+One object per algorithm carries its selection rule, its dense oracle mixing
+form, its production shard_map lowering, and its §3.2 cost model (see
+``base.Protocol``). The simulator, the mesh round builder, and every
+benchmark dispatch exclusively through ``get``/``resolve`` — a new strategy
+is one file defining a Protocol subclass plus one ``register`` call.
+"""
+from repro.protocols.base import (  # noqa: F401
+    Protocol, get, names, register, resolve, unregister,
+)
+from repro.protocols.fedavg import FedAvg
+from repro.protocols.fedp2p import FedP2P
+from repro.protocols.gossip import DecentralizedGossip
+from repro.protocols.topology_aware import TopologyAwareFedP2P
+
+register(FedAvg())
+register(FedP2P())
+register(DecentralizedGossip())
+register(TopologyAwareFedP2P())
+
+__all__ = [
+    "Protocol", "register", "unregister", "get", "names", "resolve",
+    "FedAvg", "FedP2P", "DecentralizedGossip", "TopologyAwareFedP2P",
+]

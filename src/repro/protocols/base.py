@@ -1,0 +1,211 @@
+"""The pluggable federated-learning Protocol interface + registry.
+
+The paper's contribution is a *family* of decentralization strategies
+(FedAvg -> FedP2P -> topology-aware FedP2P -> pure gossip); this module makes
+each strategy a single object that carries
+
+  * its client-selection / cluster-formation rule (``select_participants`` /
+    ``partition``),
+  * its aggregation semantics as a dense [D, D] client-mixing matrix
+    (``mixing_matrix`` — the simulator / oracle path),
+  * its production TPU lowering as a hierarchical grouped-psum shard_map
+    program (``psum_mix`` — the mesh path),
+  * and its §3.2 analytic communication-cost model (``comm_time``).
+
+``Simulator`` (CPU paper reproduction), ``core.fedp2p.make_federated_round``
+(production mesh), and the benchmarks all dispatch exclusively through
+``get(name)`` — adding an algorithm is one new file plus one ``register``
+call; nothing in the engine layers changes.
+
+Mixing-matrix convention (shared by both lowerings):
+
+    f_out = M_new @ f_new + M_old @ f_old
+
+where ``f_new`` are the post-local-training client models, ``f_old`` the
+pre-round models, and every row of ``M_new + M_old`` sums to 1 (each output
+model is a convex combination — dropped updates fall back to old params,
+never to zeros).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core.comm_model import CommParams
+from repro.core.partition import sample_participants
+from repro.core.topology import Topology
+from repro.sharding.compat import shard_map
+
+
+class Protocol:
+    """Abstract decentralization strategy. Subclass + ``register`` to add one.
+
+    Implementations must be stateless (a single instance is shared by every
+    simulator / mesh program), and every array-valued method must be
+    jit-traceable.
+    """
+
+    #: registry key, e.g. "fedp2p"
+    name: str = ""
+    #: True -> ``partition``/``comm_time`` want a ``core.topology.Topology``
+    needs_topology: bool = False
+
+    # ------------------------------------------------------------------
+    # participant selection / cluster formation
+    # ------------------------------------------------------------------
+    def num_participants(self, fl: FLConfig) -> int:
+        """P — how many clients one round of this protocol trains."""
+        return fl.participation
+
+    def num_clusters(self, fl: FLConfig) -> int:
+        """L — static cluster count backing ``partition``'s cluster_ids."""
+        return 1
+
+    def select_participants(self, key, fl: FLConfig) -> jnp.ndarray:
+        """[P] distinct client indices sampled for this round."""
+        return sample_participants(key, fl.num_clients, self.num_participants(fl))
+
+    def partition(self, key, fl: FLConfig,
+                  topology: Optional[Topology] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(selected [P], cluster_ids [P] in [0, num_clusters(fl)))."""
+        sel = self.select_participants(key, fl)
+        return sel, jnp.zeros((self.num_participants(fl),), jnp.int32)
+
+    def mesh_cluster_ids(self, num_clients_dev: int, fl: FLConfig) -> np.ndarray:
+        """Static [D] cluster assignment for the production mesh, where the
+        client axis is laid out over the data mesh axes. Contiguous by
+        default so cluster traffic stays on neighboring devices."""
+        return np.zeros((num_clients_dev,), np.int32)
+
+    # ------------------------------------------------------------------
+    # aggregation semantics — dense oracle form
+    # ------------------------------------------------------------------
+    def mixing_matrix(self, survive: jnp.ndarray, counts: jnp.ndarray,
+                      cluster_ids: jnp.ndarray, do_global_sync: bool,
+                      *, num_clusters: Optional[int] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(M_new, M_old), each [D, D]: f_out = M_new @ f_new + M_old @ f_old.
+
+        survive: [D] 0/1 straggler mask; counts: [D] per-client data weights
+        (|D_i|); cluster_ids: [D]; num_clusters must be passed when
+        cluster_ids is a tracer (it is a static shape parameter).
+        """
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # aggregation semantics — hierarchical mesh lowering
+    # ------------------------------------------------------------------
+    def psum_mix(self, f_new, f_old, survive: jnp.ndarray,
+                 do_global_sync: bool, *, mesh_info,
+                 cluster_ids: np.ndarray):
+        """shard_map realization of ``mixing_matrix`` on the production mesh:
+        one client per data-axis slice, O(leaf) memory per device (vs the
+        O(D·leaf) gather the dense [D, D] contraction degenerates to under
+        GSPMD). Must agree numerically with the dense form.
+        """
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # §3.2 analytic communication model
+    # ------------------------------------------------------------------
+    def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
+                  topology: Optional[Topology] = None) -> float:
+        """Wall-clock seconds of one round's communication for P sampled
+        devices (the paper's H(·) functions)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # shared helpers
+    # ------------------------------------------------------------------
+    @staticmethod
+    def apply_mixing(M_new: jnp.ndarray, M_old: jnp.ndarray, f_new, f_old):
+        """Apply the dense mixing matrices leaf-wise over [D, ...] pytrees."""
+        D = M_new.shape[0]
+
+        def leaf(new, old):
+            out = M_new @ new.reshape(D, -1).astype(jnp.float32)
+            out = out + M_old @ old.reshape(D, -1).astype(jnp.float32)
+            return out.reshape(new.shape).astype(new.dtype)
+
+        return jax.tree.map(leaf, f_new, f_old)
+
+    @staticmethod
+    def _shard_mix(local_fn, f_new, f_old, survive, mesh_info):
+        """Run ``local_fn(x_new, x_old, s) -> x_out`` under shard_map with
+        every leaf sharded along the data axes (the federated client axis)."""
+        from jax.sharding import PartitionSpec as P
+        names = mesh_info.dp_axes
+        axes = names if len(names) > 1 else names[0]
+        spec = jax.tree.map(lambda _: P(axes), f_new)
+        sspec = P(axes)
+        fn = shard_map(local_fn, mesh=mesh_info.mesh,
+                       in_specs=(spec, spec, sspec), out_specs=spec,
+                       check_vma=False)
+        return fn(f_new, f_old, survive)
+
+    @staticmethod
+    def _groups_from_ids(cluster_ids: np.ndarray):
+        """axis_index_groups (one group per cluster) from a static [D]
+        assignment."""
+        ids = np.asarray(cluster_ids)
+        L = int(ids.max()) + 1 if ids.size else 1
+        return [np.nonzero(ids == c)[0].tolist() for c in range(L)]
+
+    @staticmethod
+    def resolve_num_clusters(cluster_ids, num_clusters: Optional[int]) -> int:
+        if num_clusters is not None:
+            return int(num_clusters)
+        ids = np.asarray(cluster_ids)   # raises on tracers — pass num_clusters
+        return int(ids.max()) + 1 if ids.size else 1
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Protocol] = {}
+
+
+def register(protocol: Protocol) -> Protocol:
+    """Register a Protocol instance under ``protocol.name``."""
+    if not protocol.name:
+        raise ValueError("protocol must define a non-empty .name")
+    if protocol.name in _REGISTRY:
+        raise ValueError(f"protocol {protocol.name!r} is already registered")
+    _REGISTRY[protocol.name] = protocol
+    return protocol
+
+
+def unregister(name: str) -> None:
+    """Remove a registered protocol (plugin teardown / tests)."""
+    _REGISTRY.pop(name, None)
+
+
+def names() -> Tuple[str, ...]:
+    """Registered protocol names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def get(name: str) -> Protocol:
+    """Look up a registered protocol; unknown names raise (never a silent
+    FedAvg fallback)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown protocol {name!r}; registered protocols: "
+            f"{', '.join(names())}") from None
+
+
+def resolve(name: str, topology_aware: bool = False) -> Protocol:
+    """Map an ``FLConfig`` (algorithm, topology_aware) pair to a protocol:
+    ``topology_aware=True`` upgrades ``name`` to ``name + '_topo'`` when such
+    a variant is registered."""
+    if topology_aware and f"{name}_topo" in _REGISTRY:
+        name = f"{name}_topo"
+    return get(name)

@@ -1,0 +1,68 @@
+"""FedAvg (paper Algo 1) on the Protocol interface.
+
+One logical cluster = everyone; the server gathers every surviving update and
+broadcasts the data-weighted average. ``do_global_sync`` is ignored — FedAvg
+has no cluster-local stage.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core.comm_model import CommParams, h_fedavg
+from repro.core.topology import Topology
+from repro.protocols.base import Protocol
+
+
+class FedAvg(Protocol):
+    name = "fedavg"
+
+    def num_participants(self, fl: FLConfig) -> int:
+        return fl.participation
+
+    def num_clusters(self, fl: FLConfig) -> int:
+        return 1
+
+    # ------------------------------------------------------------------
+    def mixing_matrix(self, survive, counts, cluster_ids, do_global_sync,
+                      *, num_clusters: Optional[int] = None):
+        D = survive.shape[0]
+        s = survive.astype(jnp.float32)
+        w = s * counts.astype(jnp.float32)
+        total = jnp.sum(w)
+        coef = jnp.where(total > 0, w / jnp.maximum(total, 1e-12), 0.0)
+        M_new = jnp.broadcast_to(coef[None], (D, D))
+        # everyone straggled -> keep the (replicated) old params
+        all_dead = (total == 0).astype(jnp.float32)
+        M_old = all_dead * jnp.full((D, D), 1.0 / D, jnp.float32)
+        return M_new, M_old
+
+    # ------------------------------------------------------------------
+    def psum_mix(self, f_new, f_old, survive, do_global_sync, *, mesh_info,
+                 cluster_ids):
+        D = int(np.asarray(cluster_ids).shape[0])
+        names = mesh_info.dp_axes
+
+        def local_fn(x_new, x_old, s):
+            s = s.reshape(())
+            tot = jax.lax.psum(s, names)
+            coef = jnp.where(tot > 0, s / jnp.maximum(tot, 1e-12), 0.0)
+            dead = (tot == 0).astype(jnp.float32)
+
+            def leaf(new, old):
+                g = jax.lax.psum(coef * new.astype(jnp.float32), names)
+                g = g + dead * jax.lax.psum(old.astype(jnp.float32) / D, names)
+                return g.astype(new.dtype)
+
+            return jax.tree.map(leaf, x_new, x_old)
+
+        return self._shard_mix(local_fn, f_new, f_old, survive, mesh_info)
+
+    # ------------------------------------------------------------------
+    def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
+                  topology: Optional[Topology] = None) -> float:
+        return h_fedavg(p, P)

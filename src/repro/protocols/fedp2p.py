@@ -1,0 +1,118 @@
+"""FedP2P (paper Algo 2) on the Protocol interface.
+
+Phase 1 partitions the round's L*Q participants into L local P2P networks;
+phase 2 is a data-weighted Allreduce within each network; phase 3 (when
+``do_global_sync``) is the thin server step: an unweighted mean over the
+per-cluster models. Dead clusters (all members straggled) fall back to the
+mean of their members' old params, never to zeros.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core.comm_model import CommParams, h_fedp2p, min_h_fedp2p
+from repro.core.partition import random_partition
+from repro.core.topology import Topology
+from repro.protocols.base import Protocol
+
+
+class FedP2P(Protocol):
+    name = "fedp2p"
+
+    def num_participants(self, fl: FLConfig) -> int:
+        return fl.num_clusters * fl.devices_per_cluster
+
+    def num_clusters(self, fl: FLConfig) -> int:
+        return fl.num_clusters
+
+    def partition(self, key, fl: FLConfig,
+                  topology: Optional[Topology] = None):
+        return random_partition(key, fl.num_clients, fl.num_clusters,
+                                fl.devices_per_cluster)
+
+    def mesh_cluster_ids(self, num_clients_dev: int, fl: FLConfig) -> np.ndarray:
+        L = fl.num_clusters
+        assert num_clients_dev % L == 0, (num_clients_dev, L)
+        q = num_clients_dev // L
+        return np.repeat(np.arange(L, dtype=np.int32), q)
+
+    # ------------------------------------------------------------------
+    def mixing_matrix(self, survive, counts, cluster_ids, do_global_sync,
+                      *, num_clusters: Optional[int] = None):
+        """Expressing the protocol as a [D, D] client-mixing matrix keeps
+        every leaf sharded along the client axis end-to-end: the contraction
+        over the client dim lowers to exactly the within-cluster / global
+        allreduce traffic the paper analyzes."""
+        L = self.resolve_num_clusters(cluster_ids, num_clusters)
+        D = survive.shape[0]
+        s = survive.astype(jnp.float32)
+        w = s * counts.astype(jnp.float32)
+        C = jax.nn.one_hot(cluster_ids, L, dtype=jnp.float32)       # [D, L]
+        denom = jnp.maximum(C.T @ w, 1e-12)                         # [L]
+        alive = (C.T @ s > 0).astype(jnp.float32)                   # [L]
+        # gamma_j = w_j / denom_{c(j)} — within-cluster data weights
+        gamma = w * (C @ (alive / denom))                           # [D]
+        if do_global_sync:
+            n_alive = jnp.maximum(jnp.sum(alive), 1.0)
+            coef = gamma / n_alive                                  # [D]
+            M_new = jnp.broadcast_to(coef[None], (D, D))
+            all_dead = (jnp.sum(alive) == 0).astype(jnp.float32)
+            M_old = all_dead * jnp.full((D, D), 1.0 / D, jnp.float32)
+            return M_new, M_old
+        # cluster-local sync: M[i, j] = [c(i) = c(j)] gamma_j; dead clusters
+        # fall back to the mean of their members' OLD params.
+        same = C @ C.T                                              # [D, D]
+        M_new = same * gamma[None, :]
+        sizes = jnp.maximum(C.T @ jnp.ones((D,), jnp.float32), 1.0)  # [L]
+        dead_row = C @ (1.0 - alive)                                # [D]
+        M_old = same * (dead_row[:, None] * (C @ (1.0 / sizes))[None, :])
+        return M_new, M_old
+
+    # ------------------------------------------------------------------
+    def psum_mix(self, f_new, f_old, survive, do_global_sync, *, mesh_info,
+                 cluster_ids):
+        """Grouped-psum hierarchy: within-cluster Allreduce (psum with
+        axis_index_groups) + global Allreduce for the server step — the
+        literal realization of the paper's traffic pattern."""
+        names = mesh_info.dp_axes
+        groups = self._groups_from_ids(cluster_ids)
+        D = int(np.asarray(cluster_ids).shape[0])
+
+        def local_fn(x_new, x_old, s):
+            s = s.reshape(())                       # this client's survival
+            q = jax.lax.psum(jnp.ones(()), names, axis_index_groups=groups)
+            denom = jax.lax.psum(s, names, axis_index_groups=groups)
+            gamma = jnp.where(denom > 0, s / jnp.maximum(denom, 1e-12), 0.0)
+            alive = (denom > 0).astype(jnp.float32)
+            n_alive = jax.lax.psum(alive / q, names)    # each cluster q times
+            keep_old = (n_alive == 0).astype(jnp.float32)
+
+            def leaf(new, old):
+                nf = new.astype(jnp.float32)
+                cl = jax.lax.psum(gamma * nf, names, axis_index_groups=groups)
+                cl_old = jax.lax.psum(old.astype(jnp.float32) / q, names,
+                                      axis_index_groups=groups)
+                cl = jnp.where(alive > 0, cl, cl_old)
+                if do_global_sync:
+                    g = (jax.lax.psum(cl * (alive / q), names)
+                         / jnp.maximum(n_alive, 1.0))
+                    g = g + keep_old * jax.lax.psum(
+                        old.astype(jnp.float32) / D, names)
+                    return g.astype(new.dtype)
+                return cl.astype(new.dtype)
+
+            return jax.tree.map(leaf, x_new, x_old)
+
+        return self._shard_mix(local_fn, f_new, f_old, survive, mesh_info)
+
+    # ------------------------------------------------------------------
+    def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
+                  topology: Optional[Topology] = None) -> float:
+        if L is None:
+            return min_h_fedp2p(p, P)       # at the closed-form optimal L*
+        return h_fedp2p(p, P, L)

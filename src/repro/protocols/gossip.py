@@ -1,0 +1,123 @@
+"""DecentralizedGossip — the paper's "mostly pairwise" limit on the Protocol
+interface.
+
+No server step at all: every round each participant averages models with its
+ring neighbors through two pairwise exchange phases (even pairs, then odd
+pairs). The composed mixing operator W = W2 @ W1 is symmetric doubly
+stochastic, so repeated rounds contract toward consensus without any
+coordinator traffic. Stragglers contribute their OLD model to their
+partners (their update "never arrived"), keeping every row convex.
+
+On the production mesh each phase is a 2-device grouped psum — pure
+device-device traffic, zero server/DCN bytes.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core.comm_model import CommParams, allreduce_time
+from repro.core.topology import Topology
+from repro.protocols.base import Protocol
+
+
+def _phase_groups(D: int) -> Tuple[List[List[int]], List[List[int]]]:
+    """Two partitions of range(D) into ring-adjacent pairs (plus a singleton
+    when D is odd): phase 1 pairs (0,1)(2,3)..., phase 2 pairs (1,2)(3,4)...
+    with the wrap pair (D-1, 0) when D is even."""
+    phase1 = [[i, i + 1] for i in range(0, D - 1, 2)]
+    if D % 2:
+        phase1.append([D - 1])
+    phase2 = [[i, i + 1] for i in range(1, D - 1, 2)]
+    if D % 2:
+        phase2.insert(0, [0])
+    else:
+        phase2.append([D - 1, 0])
+    if D == 1:
+        phase1, phase2 = [[0]], [[0]]
+    return phase1, phase2
+
+
+def _avg_matrix(D: int, groups: List[List[int]]) -> np.ndarray:
+    """[D, D] doubly stochastic matrix averaging within each group."""
+    W = np.zeros((D, D), np.float32)
+    for g in groups:
+        for i in g:
+            for j in g:
+                W[i, j] = 1.0 / len(g)
+    return W
+
+
+class DecentralizedGossip(Protocol):
+    name = "gossip"
+
+    def num_participants(self, fl: FLConfig) -> int:
+        return fl.participation
+
+    def num_clusters(self, fl: FLConfig) -> int:
+        # every participant is its own "cluster"; mixing is purely pairwise
+        return fl.participation
+
+    def partition(self, key, fl: FLConfig,
+                  topology: Optional[Topology] = None):
+        sel = self.select_participants(key, fl)
+        return sel, jnp.arange(fl.participation, dtype=jnp.int32)
+
+    def mesh_cluster_ids(self, num_clients_dev: int, fl: FLConfig) -> np.ndarray:
+        return np.arange(num_clients_dev, dtype=np.int32)
+
+    # ------------------------------------------------------------------
+    def ring_matrix(self, D: int) -> np.ndarray:
+        """The composed one-round mixing operator W2 @ W1 (doubly
+        stochastic; rows/cols sum to 1)."""
+        g1, g2 = _phase_groups(D)
+        return _avg_matrix(D, g2) @ _avg_matrix(D, g1)
+
+    def mixing_matrix(self, survive, counts, cluster_ids, do_global_sync,
+                      *, num_clusters: Optional[int] = None):
+        # counts are ignored: gossip averaging is unweighted (each pairwise
+        # exchange is a plain mean); do_global_sync is ignored: there is no
+        # server step.
+        D = survive.shape[0]
+        W = jnp.asarray(self.ring_matrix(D))
+        s = survive.astype(jnp.float32)
+        M_new = W * s[None, :]
+        M_old = W * (1.0 - s)[None, :]
+        return M_new, M_old
+
+    # ------------------------------------------------------------------
+    def psum_mix(self, f_new, f_old, survive, do_global_sync, *, mesh_info,
+                 cluster_ids):
+        D = int(np.asarray(cluster_ids).shape[0])
+        names = mesh_info.dp_axes
+        g1, g2 = _phase_groups(D)
+
+        def local_fn(x_new, x_old, s):
+            s = s.reshape(())
+
+            def leaf(new, old):
+                # straggler's effective model is its old params
+                eff = s * new.astype(jnp.float32) \
+                    + (1.0 - s) * old.astype(jnp.float32)
+                for groups in (g1, g2):
+                    q = jax.lax.psum(jnp.ones(()), names,
+                                     axis_index_groups=groups)
+                    eff = jax.lax.psum(eff / q, names,
+                                       axis_index_groups=groups)
+                return eff.astype(new.dtype)
+
+            return jax.tree.map(leaf, x_new, x_old)
+
+        return self._shard_mix(local_fn, f_new, f_old, survive, mesh_info)
+
+    # ------------------------------------------------------------------
+    def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
+                  topology: Optional[Topology] = None) -> float:
+        """Two pairwise phases, all pairs in parallel: each phase is an
+        n=2 ring allreduce over a device-device link. No server term and no
+        dependence on P."""
+        return 2.0 * allreduce_time(p.model_bytes, 2, p.device_bw)

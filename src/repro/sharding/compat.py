@@ -1,0 +1,19 @@
+"""Version-compat shims for sharding APIs.
+
+``jax.shard_map`` graduated out of ``jax.experimental`` only in newer jax
+releases (and renamed ``check_rep`` -> ``check_vma`` along the way). All
+shard_map call sites in this repo go through this shim so the codebase runs
+on both the pinned 0.4.x toolchain and current jax.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

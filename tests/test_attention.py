@@ -1,5 +1,8 @@
 """Attention-layer unit + property tests: blocked==direct, custom-VJP grads,
 masking semantics, ring-buffer cache addressing, MLA absorbed decode."""
+import pytest
+
+pytest.importorskip("hypothesis")   # degrade, don't die, without dev deps
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,7 @@
 """FedP2P/FedAvg protocol invariants — unit + hypothesis property tests."""
+import pytest
+
+pytest.importorskip("hypothesis")   # degrade, don't die, without dev deps
 import hypothesis
 import hypothesis.strategies as st
 import jax

@@ -1,0 +1,236 @@
+"""Tests for the repro.protocols strategy API: registry round-trip, dense
+mixing_matrix vs psum_mix equivalence, gossip doubly-stochastic invariant,
+topology-aware partition gain, and simulator dispatch validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import protocols
+from repro.config import FLConfig
+from repro.core.aggregation import cluster_then_global, weighted_average
+from repro.core.topology import cluster_comm_time, make_topology
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_builtins_present():
+    for name in ("fedavg", "fedp2p", "gossip", "fedp2p_topo"):
+        assert protocols.get(name).name == name
+        assert name in protocols.names()
+
+
+def test_registry_unknown_name_lists_protocols():
+    with pytest.raises(ValueError, match="fedavg.*fedp2p"):
+        protocols.get("fedsgd")
+
+
+def test_registry_round_trip_and_duplicate_rejected():
+    class Dummy(protocols.Protocol):
+        name = "dummy-proto-test"
+
+    d = Dummy()
+    try:
+        protocols.register(d)
+        assert protocols.get("dummy-proto-test") is d
+        with pytest.raises(ValueError, match="already registered"):
+            protocols.register(Dummy())
+    finally:
+        protocols.unregister("dummy-proto-test")
+    assert "dummy-proto-test" not in protocols.names()
+
+
+def test_resolve_topology_aware_upgrade():
+    assert protocols.resolve("fedp2p", topology_aware=True).name == "fedp2p_topo"
+    assert protocols.resolve("fedp2p", topology_aware=False).name == "fedp2p"
+    # no _topo variant registered -> unchanged
+    assert protocols.resolve("fedavg", topology_aware=True).name == "fedavg"
+
+
+# ---------------------------------------------------------------------------
+# dense mixing matrices vs the aggregation oracles
+# ---------------------------------------------------------------------------
+
+def _mix_rows(proto, survive, counts, cids, L, sync, xs, old):
+    M_new, M_old = proto.mixing_matrix(jnp.asarray(survive),
+                                       jnp.asarray(counts),
+                                       jnp.asarray(cids), sync,
+                                       num_clusters=L)
+    out = proto.apply_mixing(M_new, M_old, {"w": jnp.asarray(xs)},
+                             {"w": jnp.asarray(old)})["w"]
+    return np.asarray(out), np.asarray(M_new), np.asarray(M_old)
+
+
+@pytest.mark.parametrize("survive", [np.ones(6, np.float32),
+                                     np.array([1, 0, 1, 1, 0, 0], np.float32)])
+def test_fedp2p_matrix_matches_cluster_then_global(survive):
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(6, 4)).astype(np.float32)
+    old = rng.normal(size=(6, 4)).astype(np.float32)
+    counts = rng.uniform(1, 5, 6).astype(np.float32)
+    cids = np.repeat(np.arange(3), 2).astype(np.int32)
+    out, Mn, Mo = _mix_rows(protocols.get("fedp2p"), survive, counts, cids, 3,
+                            True, xs, old)
+    ref = cluster_then_global({"w": jnp.asarray(xs)}, jnp.asarray(counts),
+                              jnp.asarray(cids), 3, jnp.asarray(survive))["w"]
+    assert np.allclose(out, out[0][None], atol=1e-5)   # server sync: consensus
+    np.testing.assert_allclose(out[0], np.asarray(ref), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose((Mn + Mo).sum(1), 1.0, atol=1e-5)  # convex rows
+
+
+def test_fedavg_matrix_matches_weighted_average():
+    rng = np.random.default_rng(1)
+    xs = rng.normal(size=(5, 3)).astype(np.float32)
+    counts = rng.uniform(1, 5, 5).astype(np.float32)
+    survive = np.array([1, 1, 0, 1, 0], np.float32)
+    out, _, _ = _mix_rows(protocols.get("fedavg"), survive, counts,
+                          np.zeros(5, np.int32), 1, True, xs, xs)
+    ref = weighted_average({"w": jnp.asarray(xs)}, jnp.asarray(counts),
+                           jnp.asarray(survive))["w"]
+    np.testing.assert_allclose(out[0], np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_fedp2p_dead_cluster_falls_back_to_old_params():
+    rng = np.random.default_rng(2)
+    xs = rng.normal(size=(4, 3)).astype(np.float32)
+    old = rng.normal(size=(4, 3)).astype(np.float32)
+    survive = np.array([1, 1, 0, 0], np.float32)     # cluster 1 fully dead
+    cids = np.array([0, 0, 1, 1], np.int32)
+    out, _, _ = _mix_rows(protocols.get("fedp2p"), survive, np.ones(4), cids,
+                          2, False, xs, old)
+    np.testing.assert_allclose(out[2], old[2:].mean(0), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gossip invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("D", [2, 4, 5, 9, 16])
+def test_gossip_mixing_doubly_stochastic(D):
+    g = protocols.get("gossip")
+    W = g.ring_matrix(D)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+    assert np.all(W >= 0)
+    # with every client surviving, M_new is exactly W and M_old vanishes
+    M_new, M_old = g.mixing_matrix(jnp.ones(D), jnp.ones(D),
+                                   jnp.arange(D), False)
+    np.testing.assert_allclose(np.asarray(M_new), W, atol=1e-6)
+    assert float(jnp.abs(M_old).max()) == 0.0
+
+
+def test_gossip_straggler_rows_stay_convex():
+    g = protocols.get("gossip")
+    survive = jnp.asarray(np.array([1, 0, 1, 0, 1, 1], np.float32))
+    M_new, M_old = g.mixing_matrix(survive, jnp.ones(6), jnp.arange(6), True)
+    np.testing.assert_allclose(np.asarray(M_new + M_old).sum(1), 1.0,
+                               atol=1e-6)
+    # a straggler's NEW model reaches nobody
+    assert float(jnp.abs(M_new[:, 1]).max()) == 0.0
+
+
+def test_gossip_preserves_mean():
+    """Doubly stochastic mixing conserves the client average (consensus
+    dynamics) — the property that makes serverless rounds sound."""
+    g = protocols.get("gossip")
+    rng = np.random.default_rng(3)
+    xs = rng.normal(size=(8, 5)).astype(np.float32)
+    M_new, M_old = g.mixing_matrix(jnp.ones(8), jnp.ones(8), jnp.arange(8),
+                                   False)
+    out = g.apply_mixing(M_new, M_old, {"w": jnp.asarray(xs)},
+                         {"w": jnp.zeros_like(xs)})["w"]
+    np.testing.assert_allclose(np.asarray(out).mean(0), xs.mean(0),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dense mixing_matrix == psum_mix on a 1-device mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["fedavg", "fedp2p", "gossip"])
+@pytest.mark.parametrize("survive", [1.0, 0.0])
+@pytest.mark.parametrize("sync", [True, False])
+def test_psum_mix_matches_dense_single_device(name, survive, sync):
+    """The shard_map lowering and the dense oracle agree on the in-process
+    mesh (D=1; the multi-device case runs in test_sharding_and_dryrun's
+    subprocess)."""
+    from repro.configs import get_config
+    from repro.sharding.rules import make_mesh_info
+    proto = protocols.get(name)
+    cfg = get_config("gemma-2b").reduced(num_layers=1, max_d_model=64)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    info = make_mesh_info(cfg, mesh)
+    fl = FLConfig(num_clusters=1)
+    cids = proto.mesh_cluster_ids(1, fl)
+    rng = np.random.default_rng(4)
+    f_new = {"a": jnp.asarray(rng.normal(size=(1, 3, 2)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(1, 4)).astype(np.float32))}
+    f_old = jax.tree.map(lambda x: x + 1.0, f_new)
+    s = jnp.asarray([survive], jnp.float32)
+    out_h = proto.psum_mix(f_new, f_old, s, sync, mesh_info=info,
+                           cluster_ids=cids)
+    M_new, M_old = proto.mixing_matrix(s, jnp.ones(1), jnp.asarray(cids),
+                                       sync, num_clusters=int(cids.max()) + 1)
+    out_d = proto.apply_mixing(M_new, M_old, f_new, f_old)
+    for a, b in zip(jax.tree.leaves(out_h), jax.tree.leaves(out_d)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# topology-aware partition
+# ---------------------------------------------------------------------------
+
+def test_topology_partition_beats_random_comm_time():
+    topo = make_topology(200, grid=8, seed=0)
+    fl = FLConfig(num_clients=200, num_clusters=10, devices_per_cluster=10)
+    p_rand, p_topo = protocols.get("fedp2p"), protocols.get("fedp2p_topo")
+    M = 100e6
+
+    def slowest(sel, ids, L):
+        sel, ids = np.asarray(sel), np.asarray(ids)
+        return max(cluster_comm_time(topo, sel[ids == c], M)
+                   for c in range(L))
+
+    t_rand, t_topo = [], []
+    for trial in range(3):
+        key = jax.random.PRNGKey(trial)
+        t_rand.append(slowest(*p_rand.partition(key, fl), 10))
+        t_topo.append(slowest(*p_topo.partition(key, fl, topo), 10))
+    assert np.mean(t_topo) < np.mean(t_rand)
+
+
+def test_topology_partition_shapes_and_balance():
+    topo = make_topology(64, grid=4, seed=1)
+    fl = FLConfig(num_clients=64, num_clusters=4, devices_per_cluster=3)
+    sel, ids = protocols.get("fedp2p_topo").partition(jax.random.PRNGKey(0),
+                                                      fl, topo)
+    sel, ids = np.asarray(sel), np.asarray(ids)
+    assert len(np.unique(sel)) == 12                 # distinct clients
+    assert np.all(np.bincount(ids, minlength=4) == 3)   # exactly Q per cluster
+
+
+# ---------------------------------------------------------------------------
+# simulator dispatch
+# ---------------------------------------------------------------------------
+
+def test_simulator_rejects_unknown_algorithm():
+    from repro.configs.paper_models import LOGREG_SYN
+    from repro.core.simulator import Simulator
+    from repro.data.federated import pack_clients
+    from repro.data.synthetic import syncov
+    xs, ys = syncov(num_clients=12, seed=0)
+    data = pack_clients(xs, ys, 10, seed=0)
+    fl = FLConfig(num_clients=12, num_clusters=2, devices_per_cluster=2,
+                  participation=4, local_epochs=1, batch_size=5, lr=0.05)
+    sim = Simulator(LOGREG_SYN, data, fl)
+    with pytest.raises(ValueError, match="registered protocols"):
+        sim.run(rounds=1, algorithm="fedsgd")
+
+
+def test_make_federated_round_rejects_unknown_algorithm():
+    from repro.core.fedp2p import make_federated_round
+    with pytest.raises(ValueError, match="registered protocols"):
+        make_federated_round(None, FLConfig(), 4, 1, algorithm="nope")

@@ -155,16 +155,21 @@ def test_hierarchical_fedp2p_mix_matches_matrix():
                    "labels": jax.random.randint(key, (D, steps, B, S), 0,
                                                 cfg.vocab_size)}
         fp = broadcast_to_clients(params, D)
-        r_ref = make_federated_round(model, fl, D, steps)
-        r_hier = make_federated_round(model, fl, D, steps, mesh_info=info)
-        for survive in (jnp.ones((D,)), jnp.array([0., 1, 1, 1, 0, 0, 1, 1])):
-            for sync in (True, False):
-                o_ref, _ = r_ref(fp, batches, survive, do_global_sync=sync)
-                o_h, _ = r_hier(fp, batches, survive, do_global_sync=sync)
-                for a, b in zip(jax.tree.leaves(o_ref), jax.tree.leaves(o_h)):
-                    np.testing.assert_allclose(
-                        np.asarray(a, np.float32), np.asarray(b, np.float32),
-                        rtol=2e-3, atol=2e-4)
+        for algo in ("fedp2p", "gossip", "fedavg"):
+            r_ref = make_federated_round(model, fl, D, steps, algorithm=algo)
+            r_hier = make_federated_round(model, fl, D, steps, algorithm=algo,
+                                          mesh_info=info)
+            for survive in (jnp.ones((D,)),
+                            jnp.array([0., 1, 1, 1, 0, 0, 1, 1])):
+                for sync in (True, False):
+                    o_ref, _ = r_ref(fp, batches, survive, do_global_sync=sync)
+                    o_h, _ = r_hier(fp, batches, survive, do_global_sync=sync)
+                    for a, b in zip(jax.tree.leaves(o_ref),
+                                    jax.tree.leaves(o_h)):
+                        np.testing.assert_allclose(
+                            np.asarray(a, np.float32),
+                            np.asarray(b, np.float32),
+                            rtol=2e-3, atol=2e-4, err_msg=algo)
         print("OK")
     """)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
