@@ -1,6 +1,8 @@
 """Table 1 + Fig 2: test accuracy of every registered protocol on the five
-datasets (FedP2P vs FedAvg are the paper's rows; gossip and topology-aware
-FedP2P ride along via the ``repro.protocols`` registry).
+datasets (FedP2P vs FedAvg are the paper's rows; gossip, random-matching
+async gossip, and topology-aware FedP2P ride along via the
+``repro.protocols`` registry). Every run is one scan-compiled
+``DenseEngine.run_rounds`` program — per-round metrics stay on device.
 
 Offline stand-ins preserve the paper's partition statistics (DESIGN.md §3);
 the claim validated is the RELATIONSHIP (FedP2P >= FedAvg at equal global

@@ -40,15 +40,17 @@ def run(quick: bool = True):
     for P in (16, 32, 256):
         rows.append((f"fig3/tpu_pod/P{P}/speedup_R", speedup_R(tpu, P),
                      f"L*={optimal_L(tpu, P):.1f}"))
-    # per-protocol round cost through the registry (same paper regime)
+    # per-protocol round cost through the registry (same paper regime);
+    # topology-aware protocols read the lattice from ctx.topology
     p = CommParams(MODEL_BYTES, SERVER_BW, SERVER_BW / 100, alpha=4)
-    topo = make_topology(256, grid=8, seed=0)
+    topo_ctx = protocols.make_context(topology=make_topology(256, grid=8,
+                                                             seed=0))
     for P in (100, 1000):
         h_ref = protocols.get("fedavg").comm_time(p, P)
         for name in protocols.names():
             proto = protocols.get(name)
             h = proto.comm_time(p, P,
-                                topology=topo if proto.needs_topology else None)
+                                ctx=topo_ctx if proto.needs_topology else None)
             rows.append((f"fig3/protocols/{name}/P{P}/h_seconds", h,
                          f"vs_fedavg={h_ref / max(h, 1e-12):.2f}x"))
     return rows

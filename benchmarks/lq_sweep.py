@@ -1,6 +1,7 @@
 """Fig 5: FedP2P accuracy across L (number of local P2P networks) and (L,Q)
 combinations at fixed P = L*Q — the paper's claim is FLATNESS, which frees L
-to be chosen for communication optimality."""
+to be chosen for communication optimality. Each configuration is one
+scan-compiled ``DenseEngine.run_rounds`` program."""
 from __future__ import annotations
 
 import numpy as np

@@ -1,15 +1,22 @@
 """Roofline table (deliverable g): reads the dry-run JSON artifacts and
 emits per (arch x shape x mesh): the three terms, dominant bottleneck,
-MODEL_FLOPS/HLO_FLOPs ratio, memory fit, and a one-line improvement note."""
+MODEL_FLOPS/HLO_FLOPs ratio, memory fit, and a one-line improvement note.
+
+Per-protocol federated rounds (``repro.launch.dryrun --protocol all``) show
+up as their own rows: the ``arch`` field of those artifacts is
+``<arch>+<protocol>`` (fedavg / fedp2p / gossip / gossip_async / ...), so
+one table compares every registered strategy's traffic pattern on identical
+hardware."""
 from __future__ import annotations
 
+import glob
 import json
 import os
 from typing import List
 
-RESULT_FILES = ("results/dryrun_single.json", "results/dryrun_multi.json",
-                "results/dryrun_fedp2p_single.json",
-                "results/dryrun_fedp2p_multi.json")
+RESULT_FILES = ("results/dryrun_single.json", "results/dryrun_multi.json")
+# per-protocol round artifacts, e.g. results/dryrun_gossip_async_single.json
+RESULT_GLOBS = ("results/dryrun_*.json",)
 
 NOTES = {
     "collective": ("shrink the dominant collective: cache weight-gathers "
@@ -20,10 +27,19 @@ NOTES = {
 
 
 def load_rows() -> List[dict]:
-    rows = []
-    for f in RESULT_FILES:
-        if os.path.exists(f):
-            rows.extend(r for r in json.load(open(f)) if r.get("ok"))
+    files = [f for f in RESULT_FILES if os.path.exists(f)]
+    for pat in RESULT_GLOBS:
+        files.extend(f for f in glob.glob(pat) if f not in files)
+    # newest artifact wins on (arch, shape, mesh) collisions, so a stale
+    # legacy file never shadows a fresh per-protocol dry-run
+    files.sort(key=os.path.getmtime, reverse=True)
+    rows, seen = [], set()
+    for f in files:
+        for r in json.load(open(f)):
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+            if r.get("ok") and key not in seen:
+                seen.add(key)
+                rows.append(r)
     return rows
 
 

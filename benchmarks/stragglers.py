@@ -1,7 +1,9 @@
 """Fig 4: accuracy under 50% stragglers — FedP2P keeps its accuracy, FedAvg
-degrades and oscillates (max round-to-round jump). Gossip rides along via
-the registry: purely pairwise mixing has no aggregation bottleneck to
-straggle."""
+degrades and oscillates (max round-to-round jump). Gossip and async gossip
+ride along via the registry: purely pairwise mixing has no aggregation
+bottleneck to straggle (async gossip re-draws its matching every round, so
+a straggler's partner changes round to round). Each run is one
+scan-compiled ``DenseEngine.run_rounds`` program."""
 from __future__ import annotations
 
 import numpy as np
@@ -23,7 +25,8 @@ def run(quick: bool = True, rate: float = 0.5):
     }
     R = 15 if quick else 50
     seeds = (0, 1)
-    algos = [protocols.get(a).name for a in ("fedp2p", "fedavg", "gossip")]
+    algos = [protocols.get(a).name
+             for a in ("fedp2p", "fedavg", "gossip", "gossip_async")]
     for name, (net, data) in datasets.items():
         for algo in algos:
             accs = {}

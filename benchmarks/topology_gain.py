@@ -43,13 +43,14 @@ def run(quick: bool = True):
     rows.append(("topology/speedup",
                  float(np.mean(times_rand) / np.mean(times_topo)),
                  "paper §5: grouping by hops benefits comm efficiency"))
-    # the same gain through the §3.2 cost interface
+    # the same gain through the §3.2 cost interface (ctx carries the lattice)
     p = CommParams(MODEL_BYTES, server_bw=1e9, device_bw=25e6, alpha=1.0)
     P = L * Q
     rows.append(("topology/comm_time/fedp2p_analytic_s",
                  p_rand.comm_time(p, P, L=L), f"L={L}"))
     rows.append(("topology/comm_time/fedp2p_topo_s",
-                 p_topo.comm_time(p, P, L=L, topology=topo),
+                 p_topo.comm_time(p, P, L=L,
+                                  ctx=protocols.make_context(topology=topo)),
                  "slowest hop-aware cluster + server term"))
     return rows
 

@@ -1,13 +1,27 @@
 """Quickstart: every registered protocol on SynCov (paper §4.1) in a couple
 of minutes on CPU — FedAvg (Algo 1), FedP2P (Algo 2), decentralized gossip
-(the no-server limit), and topology-aware FedP2P (§5).
+(the no-server limit), topology-aware FedP2P (§5), and async gossip (a
+fresh random matching per round, drawn from the round key).
 
     PYTHONPATH=src python examples/quickstart.py
 
 Adding your own strategy is one file: subclass ``repro.protocols.Protocol``,
+implement ``mixing_matrix(ctx)`` (dense oracle) and optionally
+``psum_mix(f_new, f_old, ctx)`` (production mesh) against the single
+``RoundContext`` record — ``ctx.key`` / ``ctx.round_index`` / ``ctx.survive``
+/ ``ctx.counts`` / ``ctx.cluster_ids`` plus static topology/mesh metadata —
 call ``repro.protocols.register(...)``, and it shows up in this loop, in the
-simulator, on the production mesh, and in every benchmark.
+simulator, on the production mesh, and in every benchmark. Because the
+context carries a per-round PRNG key, even *stochastic* protocols (see
+``protocols/async_gossip.py``) are one file.
+
+Execution is engine-driven: ``Simulator.run`` compiles the whole T-round
+loop into ONE ``jax.lax.scan`` program (``DenseEngine.run_rounds``) with
+on-device metric buffers — the ``MeshEngine`` twin does the same with
+grouped-psum mixing on the production mesh.
 """
+import jax
+
 from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import LOGREG_SYN
@@ -30,15 +44,25 @@ def main():
     best = {}
     for name in protocols.names():
         print(f"== {name} ==")
+        # one scan-compiled run_rounds program per protocol
         best[name] = sim.run(rounds=15, algorithm=name, seed=0,
                              verbose=True).best_acc
     print("\nbest accuracy: "
           + " ".join(f"{n}={a:.4f}" for n, a in best.items()))
 
+    # --- peek at the RoundContext API the protocols consume -------------
+    proto = protocols.get("gossip_async")
+    ctx = protocols.make_context(key=jax.random.PRNGKey(0), num_clients=10)
+    M_new, M_old = proto.mixing_matrix(ctx)      # this round's matching...
+    ctx2 = ctx.replace(key=jax.random.PRNGKey(1))
+    M_new2, _ = proto.mixing_matrix(ctx2)        # ...a different one next key
+    print(f"\ngossip_async matchings differ across keys: "
+          f"{bool((M_new != M_new2).any())}")
+
     # --- communication model (§3.2): what does each round cost? ---
     p = CommParams(model_bytes=100e6, server_bw=1e9, device_bw=1e7, alpha=4)
     P = 1000
-    print(f"\ncomm model @P={P}: optimal L*={optimal_L(p, P):.1f}, "
+    print(f"comm model @P={P}: optimal L*={optimal_L(p, P):.1f}, "
           f"speedup R={speedup_R(p, P):.2f}x over FedAvg")
     for name in protocols.names():
         proto = protocols.get(name)

@@ -28,10 +28,18 @@ def fmt(rows, title):
 
 
 def main():
-    for f, title in (("results/dryrun_single.json", "Single-pod (16x16 = 256 chips)"),
-                     ("results/dryrun_multi.json", "Multi-pod (2x16x16 = 512 chips)"),
-                     ("results/dryrun_fedp2p_single.json", "FedP2P round (paper protocol) — single-pod"),
-                     ("results/dryrun_fedp2p_multi.json", "FedP2P round — multi-pod")):
+    import glob
+    named = [("results/dryrun_single.json", "Single-pod (16x16 = 256 chips)"),
+             ("results/dryrun_multi.json", "Multi-pod (2x16x16 = 512 chips)"),
+             ("results/dryrun_fedp2p_single.json",
+              "FedP2P round (paper protocol) — single-pod"),
+             ("results/dryrun_fedp2p_multi.json", "FedP2P round — multi-pod")]
+    seen = {f for f, _ in named}
+    # per-protocol round artifacts from `repro.launch.dryrun --protocol ...`
+    extra = [(f, f"Protocol round — {os.path.basename(f)[len('dryrun_'):-len('.json')]}")
+             for f in sorted(glob.glob("results/dryrun_*.json"))
+             if f not in seen]
+    for f, title in named + extra:
         if os.path.exists(f):
             print(fmt(json.load(open(f)), title))
 

@@ -1,17 +1,20 @@
 """Federated rounds as a production distributed program (TPU-native).
 
 Mapping (DESIGN.md §3): each slice of the ``data`` mesh axis hosts one
-*client group* with its own model replica and local data shard. One jitted
+*client group* with its own model replica and local data shard. The round
+mechanics live in ``repro.protocols.engine.MeshEngine``; one jitted
 ``round_fn``:
 
   1. local training  — ``vmap`` over the client axis (sharded over ``data``):
      E·steps of SGD per client with NO cross-client communication (the vmap
      keeps every op client-diagonal, so GSPMD emits zero collectives here);
-  2. protocol mixing — dispatched through ``repro.protocols``: on a real
-     mesh the protocol's ``psum_mix`` shard_map lowering runs (grouped
-     intra-cluster allreduces on ICI, global allreduce / pairwise exchange
-     for the server / gossip step); without a mesh the protocol's dense
-     [D, D] ``mixing_matrix`` oracle form runs instead.
+  2. protocol mixing — dispatched through ``repro.protocols`` via a
+     ``RoundContext`` (round PRNG key, straggler mask, per-client |D_i|
+     counts, cluster assignment): on a real mesh the protocol's ``psum_mix``
+     shard_map lowering runs (grouped intra-cluster allreduces on ICI,
+     global allreduce / pairwise exchange for the server / gossip step);
+     without a mesh the protocol's dense [D, D] ``mixing_matrix`` oracle
+     form runs instead.
 
 Federated state: every param leaf gains a leading client axis [D, ...]
 sharded ``P(dp_axes)`` — per-device memory equals one replica. This entry
@@ -20,15 +23,14 @@ architectures whose single replica fits one chip (the FL regime).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro import protocols
 from repro.config import FLConfig
 from repro.models.model import Model
+from repro.protocols.engine import MeshEngine
 
 
 def broadcast_to_clients(params, num_clients_dev: int):
@@ -41,57 +43,25 @@ def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
                          local_steps: int,
                          algorithm: str = "",
                          remat: bool = True,
+                         counts=None,
                          out_shardings=None,
                          mesh_info=None) -> Callable:
-    """Returns round_fn(f_params, batches, survive, do_global_sync) ->
-    (f_params, mean_loss).
+    """Returns round_fn(f_params, batches, survive, key,
+    do_global_sync=True) -> (f_params, mean_loss).
 
     f_params: pytree, leaves [D, ...]. batches: pytree, leaves
     [D, local_steps, ...] (e.g. tokens [D, T, B_loc, S]). survive: [D] 0/1
-    straggler mask. do_global_sync: static python bool. ``algorithm`` is any
-    ``repro.protocols`` registry name (default: fl.algorithm) — unknown
-    names raise ValueError.
+    straggler mask. key: this round's PRNG key (stochastic protocols draw
+    their mixing structure from it). do_global_sync: static python bool.
+    ``algorithm`` is any ``repro.protocols`` registry name (default:
+    fl.algorithm) — unknown names raise ValueError. ``counts`` carries
+    non-uniform per-client data weights |D_i| (default: uniform) into the
+    protocols' weighted psums.
     """
-    proto = protocols.get(algorithm or fl.algorithm)
-    D = num_clients_dev
-    cluster_ids_np = proto.mesh_cluster_ids(D, fl)
-    num_clusters = int(cluster_ids_np.max()) + 1
-    cluster_ids = jnp.asarray(cluster_ids_np)
-    unit_counts = jnp.ones((D,), jnp.float32)
-
-    def local_train(params, batches):
-        def step(p, b):
-            (loss, _), grads = jax.value_and_grad(
-                functools.partial(model.loss_fn, remat=remat),
-                has_aux=True)(p, b)
-            p = jax.tree.map(lambda w, g: (w - fl.lr * g.astype(jnp.float32)
-                                           ).astype(w.dtype), p, grads)
-            return p, loss
-
-        params, losses = jax.lax.scan(step, params, batches)
-        return params, jnp.mean(losses)
-
-    vlocal = jax.vmap(local_train)
-
-    jit_kwargs = {"static_argnames": ("do_global_sync",)}
-    if out_shardings is not None:
-        jit_kwargs["out_shardings"] = out_shardings
-
-    @functools.partial(jax.jit, **jit_kwargs)
-    def round_fn(f_params, batches, survive, do_global_sync: bool = True):
-        f_new, losses = vlocal(f_params, batches)
-        if mesh_info is not None:
-            f_out = proto.psum_mix(f_new, f_params, survive, do_global_sync,
-                                   mesh_info=mesh_info,
-                                   cluster_ids=cluster_ids_np)
-        else:
-            M_new, M_old = proto.mixing_matrix(survive, unit_counts,
-                                               cluster_ids, do_global_sync,
-                                               num_clusters=num_clusters)
-            f_out = proto.apply_mixing(M_new, M_old, f_new, f_params)
-        return f_out, jnp.mean(losses)
-
-    return round_fn
+    engine = MeshEngine(model, fl, num_clients_dev, local_steps,
+                        algorithm=algorithm, counts=counts, remat=remat,
+                        out_shardings=out_shardings, mesh_info=mesh_info)
+    return engine.round_fn
 
 
 def federated_state_specs(f_params, mesh, dp_axes: Tuple[str, ...]):

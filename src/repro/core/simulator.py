@@ -1,12 +1,17 @@
-"""Protocol simulation engine — the paper-faithful reproduction layer.
+"""Protocol simulation facade — the paper-faithful reproduction layer.
 
-Runs N clients with the paper's own model classes (§4.2) on CPU. Client-local
-SGD (E epochs, batch O, lr eta) is ``vmap``-ed over all participants of a
-round; aggregation is whatever ``repro.protocols`` strategy the round runs:
-the protocol supplies its participant selection, its cluster formation, and
-its dense [P, P] mixing matrices (the oracle form of the same operator the
-production mesh lowers to grouped psums). Everything inside a round is one
-jitted program.
+Runs N clients with the paper's own model classes (§4.2) on CPU. All the
+round mechanics live in ``repro.protocols.engine.DenseEngine``: client-local
+SGD (E epochs, batch O, lr eta) vmapped over the round's participants, then
+whatever ``repro.protocols`` strategy the round runs, driven through a
+``RoundContext`` (the protocol supplies its participant selection, its
+cluster formation, and its dense [P, P] mixing matrices — the oracle form of
+the same operator the production mesh lowers to grouped psums).
+
+``Simulator.run`` executes the whole T-round loop as ONE scan-compiled
+program (``DenseEngine.run_rounds``) with on-device metric buffers — no
+per-round Python dispatch, no per-metric ``float()`` host syncs — and
+unpacks the buffers into the same ``History`` the benchmarks consume.
 
 This layer produces the paper's Table 1 / Figs 2, 4, 5 analogues
 (see benchmarks/).
@@ -18,141 +23,18 @@ from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import PaperNetConfig
-from repro.core.straggler import straggler_mask
 from repro.core.topology import Topology, make_topology
 from repro.data.federated import FederatedDataset
-from repro.models.paper_nets import (
-    init_paper_net, paper_net_accuracy, paper_net_loss,
+from repro.models.paper_nets import init_paper_net
+from repro.protocols.engine import (  # noqa: F401 — re-exported stable API
+    DenseEngine, make_local_trainer,
 )
 
-
-# ---------------------------------------------------------------------------
-# Client-local training (vmapped)
-# ---------------------------------------------------------------------------
-
-def make_local_trainer(net: PaperNetConfig, fl: FLConfig):
-    """Returns f(params, cx, cy, cmask, key) -> (params', mean_loss) for ONE
-    client; callers vmap it over participants."""
-    O = fl.batch_size
-
-    def local_train(params, cx, cy, cmask, key):
-        n_max = cy.shape[0]
-        steps = max(1, -(-n_max // O))               # ceil
-
-        def epoch(carry, ekey):
-            params, loss_sum, cnt = carry
-            perm = jax.random.permutation(ekey, n_max)
-
-            def step(carry, s):
-                params, loss_sum, cnt = carry
-                idx = jnp.take(perm, (jnp.arange(O) + s * O) % n_max)
-                batch = {"x": cx[idx], "y": cy[idx], "mask": cmask[idx]}
-                loss, grads = jax.value_and_grad(paper_net_loss)(params, batch, net)
-                params = jax.tree.map(
-                    lambda p, g: p - fl.lr * g.astype(p.dtype), params, grads)
-                return (params, loss_sum + loss, cnt + 1), None
-
-            (params, loss_sum, cnt), _ = jax.lax.scan(
-                step, (params, loss_sum, cnt), jnp.arange(steps))
-            return (params, loss_sum, cnt), None
-
-        ekeys = jax.random.split(key, fl.local_epochs)
-        (params, loss_sum, cnt), _ = jax.lax.scan(
-            epoch, (params, jnp.zeros(()), jnp.zeros(())), ekeys)
-        return params, loss_sum / jnp.maximum(cnt, 1.0)
-
-    return local_train
-
-
-# ---------------------------------------------------------------------------
-# Rounds
-# ---------------------------------------------------------------------------
-
-def _gather_clients(data_dev, sel):
-    return (jnp.take(data_dev["x"], sel, axis=0),
-            jnp.take(data_dev["y"], sel, axis=0),
-            jnp.take(data_dev["mask"], sel, axis=0),
-            jnp.take(data_dev["counts"], sel, axis=0))
-
-
-def make_protocol_round(net: PaperNetConfig, fl: FLConfig, data_dev: Dict,
-                        proto: protocols.Protocol,
-                        topology: Optional[Topology] = None):
-    """One jitted global round of ``proto``:
-
-      1. partition  — the protocol picks P participants and their clusters;
-      2. local SGD  — vmapped over participants;
-      3. mixing     — the protocol's dense (M_new, M_old) form; with
-         ``sync_period > 1`` intermediate sub-rounds mix WITHOUT the global
-         step (cluster-local for FedP2P, a no-op distinction for FedAvg);
-      4. collapse   — the reported global model is the mean over the mixed
-         client models (exact for server protocols, whose rows agree; the
-         standard consensus-average readout for gossip).
-    """
-    local_train = make_local_trainer(net, fl)
-    vtrain = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))
-    vtrain_per = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0))
-    P = proto.num_participants(fl)
-    L = proto.num_clusters(fl)
-
-    @jax.jit
-    def round_fn(params, key):
-        k_sel, k_tr, k_str = jax.random.split(key, 3)
-        sel, cids = proto.partition(k_sel, fl, topology)
-        cx, cy, cm, counts = _gather_clients(data_dev, sel)
-        smask = straggler_mask(k_str, P, fl.straggler_rate)
-        old = jax.tree.map(
-            lambda p: jnp.broadcast_to(p[None], (P,) + p.shape), params)
-
-        client_params, losses = None, jnp.zeros(())
-        for r in range(max(1, fl.sync_period)):
-            keys = jax.random.split(jax.random.fold_in(k_tr, r), P)
-            if client_params is None:
-                client_params, losses = vtrain(params, cx, cy, cm, keys)
-            else:
-                M_new, M_old = proto.mixing_matrix(
-                    smask, counts, cids, False, num_clusters=L)
-                start = proto.apply_mixing(M_new, M_old, client_params, old)
-                client_params, losses = vtrain_per(start, cx, cy, cm, keys)
-
-        M_new, M_old = proto.mixing_matrix(smask, counts, cids, True,
-                                           num_clusters=L)
-        mixed = proto.apply_mixing(M_new, M_old, client_params, old)
-        new_params = jax.tree.map(lambda x: jnp.mean(x, axis=0), mixed)
-        return new_params, jnp.mean(losses)
-
-    return round_fn
-
-
-# ---------------------------------------------------------------------------
-# Evaluation
-# ---------------------------------------------------------------------------
-
-def make_evaluator(net: PaperNetConfig, data_dev: Dict):
-    def eval_one(params, tx, ty, tm):
-        acc = paper_net_accuracy(params, {"x": tx, "y": ty, "mask": tm}, net)
-        return acc, jnp.sum(tm)
-
-    veval = jax.vmap(eval_one, in_axes=(None, 0, 0, 0))
-
-    @jax.jit
-    def evaluate(params):
-        accs, ns = veval(params, data_dev["test_x"], data_dev["test_y"],
-                         data_dev["test_mask"])
-        sample_weighted = jnp.sum(accs * ns) / jnp.maximum(jnp.sum(ns), 1.0)
-        client_mean = jnp.mean(accs)
-        return sample_weighted, client_mean
-
-    return evaluate
-
-
-# ---------------------------------------------------------------------------
-# Simulator facade
-# ---------------------------------------------------------------------------
 
 @dataclass
 class History:
@@ -177,42 +59,48 @@ class Simulator:
             "test_x": jnp.asarray(data.test_x), "test_y": jnp.asarray(data.test_y),
             "test_mask": jnp.asarray(data.test_mask),
         }
-        self._round_fns: Dict[str, callable] = {}
-        self.evaluate = make_evaluator(net, self.data_dev)
+        self._engines: Dict[str, DenseEngine] = {}
 
     def init_params(self, seed: int = 0):
         return init_paper_net(jax.random.PRNGKey(seed), self.net)
 
-    def _round_fn(self, algorithm: str):
+    def engine(self, algorithm: str) -> DenseEngine:
         """Registry dispatch — unknown names raise ValueError listing the
         registered protocols (never a silent FedAvg fallback)."""
         proto = protocols.resolve(algorithm,
                                   topology_aware=self.fl.topology_aware)
-        if proto.name not in self._round_fns:
+        if proto.name not in self._engines:
             if proto.needs_topology and self.topology is None:
                 self.topology = make_topology(self.fl.num_clients,
                                               seed=self.fl.seed)
-            self._round_fns[proto.name] = make_protocol_round(
-                self.net, self.fl, self.data_dev, proto, self.topology)
-        return self._round_fns[proto.name]
+            self._engines[proto.name] = DenseEngine(
+                self.net, self.data_dev, self.fl, proto, self.topology)
+        return self._engines[proto.name]
+
+    @property
+    def evaluate(self):
+        """Jitted params -> (sample-weighted acc, client-mean acc)."""
+        return self.engine(self.fl.algorithm).evaluate
 
     def run(self, rounds: int = 0, algorithm: str = "", seed: int = 0,
             eval_every: int = 1, verbose: bool = False) -> History:
         rounds = rounds or self.fl.rounds
         algorithm = algorithm or self.fl.algorithm
-        round_fn = self._round_fn(algorithm)
+        engine = self.engine(algorithm)
         params = self.init_params(seed)
         key = jax.random.PRNGKey(seed + 1)
+        _, metrics = engine.run_rounds(params, key, rounds,
+                                       eval_every=eval_every)
+        acc = np.asarray(metrics["acc"])
+        acc_m = np.asarray(metrics["acc_client_mean"])
+        loss = np.asarray(metrics["train_loss"])
         hist = History()
         for t in range(rounds):
-            key, kr = jax.random.split(key)
-            params, loss = round_fn(params, kr)
             if (t + 1) % eval_every == 0 or t == rounds - 1:
-                acc_w, acc_m = self.evaluate(params)
-                hist.acc.append(float(acc_w))
-                hist.acc_client_mean.append(float(acc_m))
-                hist.train_loss.append(float(loss))
+                hist.acc.append(float(acc[t]))
+                hist.acc_client_mean.append(float(acc_m[t]))
+                hist.train_loss.append(float(loss[t]))
                 if verbose:
                     print(f"  [{algorithm}] round {t+1:4d} "
-                          f"acc={float(acc_w):.4f} loss={float(loss):.4f}")
+                          f"acc={float(acc[t]):.4f} loss={float(loss[t]):.4f}")
         return hist

@@ -106,17 +106,22 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return result
 
 
-def dryrun_fedp2p(arch: str, *, multi_pod: bool = False, local_steps: int = 4,
-                  client_batch: int = 2, seq_len: int = 4096,
-                  num_clusters: int = 4, verbose: bool = True):
-    """Lower + compile the PAPER'S protocol (core/fedp2p.py) on the
-    production mesh: one client group per data-axis slice, L clusters,
-    grouped intra-cluster allreduce + global sync. This is the
-    paper-representative entry in the roofline study."""
+def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
+                    multi_pod: bool = False, local_steps: int = 4,
+                    client_batch: int = 2, seq_len: int = 4096,
+                    num_clusters: int = 4, verbose: bool = True):
+    """Lower + compile one federated round of ANY registered protocol
+    (``repro.protocols``) on the production mesh: one client group per
+    data-axis slice, the protocol's grouped-psum ``psum_mix`` lowering for
+    the sync step. The fedp2p row is the paper-representative entry in the
+    roofline study; fedavg / gossip / gossip_async price the registry's
+    other traffic patterns on identical hardware."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro import protocols
     from repro.config import FLConfig
     from repro.core.fedp2p import make_federated_round
+    proto = protocols.get(algorithm)
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     info = make_mesh_info(cfg, mesh)
@@ -140,37 +145,50 @@ def dryrun_fedp2p(arch: str, *, multi_pod: bool = False, local_steps: int = 4,
     out_specs = (jax.tree.map(lambda s: s.sharding, f_params),
                  NamedSharding(mesh, P()))
     round_fn = make_federated_round(model, fl, D, local_steps,
+                                    algorithm=algorithm,
                                     out_shardings=out_specs, mesh_info=info)
     bshape = (D, local_steps, client_batch, seq_len)
     batches = {"tokens": sds(bshape, jnp.int32, P(dspec, None, None, None)),
                "labels": sds(bshape, jnp.int32, P(dspec, None, None, None))}
     survive = sds((D,), jnp.float32, P(dspec))
+    key = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=NamedSharding(mesh, P())),
+        jax.eval_shape(lambda: jax.random.PRNGKey(0)))
 
     t0 = time.time()
     flops_g, bytes_g = rl.program_cost(
-        lambda fp, b, s: round_fn(fp, b, s, do_global_sync=True),
-        f_params, batches, survive)
-    lowered = round_fn.lower(f_params, batches, survive, do_global_sync=True)
+        lambda fp, b, s, k: round_fn(fp, b, s, k, do_global_sync=True),
+        f_params, batches, survive, key)
+    lowered = round_fn.lower(f_params, batches, survive, key,
+                             do_global_sync=True)
     compiled = lowered.compile()
     tokens = D * local_steps * client_batch * seq_len
+    L_eff = int(proto.mesh_cluster_ids(D, fl).max()) + 1
     report = rl.analyze(
-        compiled, arch=f"{arch}+fedp2p", shape=f"round_{seq_len}",
+        compiled, arch=f"{arch}+{algorithm}", shape=f"round_{seq_len}",
         mesh_name="multi" if multi_pod else "single",
         chips=mesh.devices.size, cfg=cfg, params_sds=p_shapes, tokens=tokens,
-        mode="train", strategy=f"fedp2p(D={D},L={num_clusters})",
+        mode="train", strategy=f"{algorithm}(D={D},L={L_eff})",
         flops_global=flops_g, bytes_global=bytes_g)
     result = report.to_dict()
     mem = compiled.memory_analysis()
-    result.update({"ok": True, "compile_s": round(time.time() - t0, 1),
+    result.update({"ok": True, "protocol": algorithm,
+                   "compile_s": round(time.time() - t0, 1),
                    "arg_bytes_per_device": float(mem.argument_size_in_bytes),
                    "temp_bytes_per_device": float(mem.temp_size_in_bytes)})
     if verbose:
-        print(f"[{arch}+fedp2p x {result['mesh']}] "
+        print(f"[{arch}+{algorithm} x {result['mesh']}] "
               f"mem={result['peak_mem_per_device_gib']:.2f}GiB/dev "
               f"compute={report.compute_s:.4f}s memory={report.memory_s:.4f}s "
               f"coll={report.collective_s:.4f}s dom={report.dominant} "
               f"useful={report.useful_flops_ratio:.2f}")
     return result
+
+
+def dryrun_fedp2p(arch: str, **kwargs):
+    """Back-compat alias: the paper-protocol row of ``dryrun_protocol``."""
+    return dryrun_protocol(arch, "fedp2p", **kwargs)
 
 
 def _opt_sharding(leaf_sds, p_sds, info):
@@ -191,24 +209,42 @@ def main(argv=None):
     ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--fedp2p", action="store_true",
-                    help="lower the paper's fedp2p_round instead of the "
-                         "train/serve entry points")
+                    help="shorthand for --protocol fedp2p")
+    ap.add_argument("--protocol", default=None, metavar="NAME",
+                    help="lower one federated round of a registered "
+                         "protocol (or 'all') instead of the train/serve "
+                         "entry points")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
-    if args.fedp2p:
+    if args.fedp2p and not args.protocol:
+        args.protocol = "fedp2p"
+    if args.protocol:
+        from repro import protocols
+        algos = (list(protocols.names()) if args.protocol == "all"
+                 else [protocols.get(args.protocol).name])
         results, failures = [], []
         for multi in {"single": [False], "multi": [True],
                       "both": [False, True]}[args.mesh]:
-            try:
-                results.append(dryrun_fedp2p(args.arch or "qwen2-1.5b",
-                                             multi_pod=multi))
-            except Exception as e:  # noqa: BLE001
-                traceback.print_exc()
-                failures.append(repr(e))
+            for algo in algos:
+                mesh_name = "multi" if multi else "single"
+                try:
+                    results.append(dryrun_protocol(args.arch or "qwen2-1.5b",
+                                                   algo, multi_pod=multi))
+                except Exception as e:  # noqa: BLE001 — report all failures
+                    traceback.print_exc()
+                    failures.append((algo, mesh_name, repr(e)))
+                    results.append({
+                        "arch": f"{args.arch or 'qwen2-1.5b'}+{algo}",
+                        "shape": "round", "mesh": mesh_name,
+                        "protocol": algo, "ok": False, "error": repr(e)})
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(results, f, indent=1)
+        if failures:
+            print(f"FAILURES ({len(failures)}):")
+            for f in failures:
+                print("  ", f)
         sys.exit(1 if failures else 0)
 
     archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]

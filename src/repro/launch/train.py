@@ -6,15 +6,18 @@ Two entry points:
     architecture (used by examples/train_lm.py; CPU-friendly at reduced
     config, production mesh via --mesh).
   * ``run_federated_training`` — the paper's protocol at production scale:
-    clients mapped onto the data axis, FedP2P hierarchical sync
-    (core/fedp2p.py), straggler injection, per-round metrics.
+    clients mapped onto the data axis, protocol sync via
+    ``repro.protocols.MeshEngine``, straggler injection, per-round metrics.
+    The whole T-round loop is ONE scan-compiled program
+    (``MeshEngine.run_rounds``): batches for every round are staged up
+    front, losses come back as a [T] on-device buffer — no per-round Python
+    dispatch or ``float()`` host syncs.
 
 Both share the substrates: data pipeline, optimizer, checkpointing.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import Dict, Optional
 
@@ -26,11 +29,11 @@ from repro import protocols
 from repro.checkpoint import save_checkpoint
 from repro.config import FLConfig, TrainConfig
 from repro.configs import get_config
-from repro.core.fedp2p import broadcast_to_clients, make_federated_round
-from repro.core.straggler import straggler_mask
+from repro.core.fedp2p import broadcast_to_clients
 from repro.data.lm import token_stream_batches
 from repro.launch.steps import build_train_step
 from repro.models.model import build_model
+from repro.protocols.engine import MeshEngine
 
 
 def run_lm_training(arch: str, *, steps: int = 100, batch: int = 8,
@@ -73,36 +76,45 @@ def run_federated_training(arch: str, *, rounds: int = 20,
                            seq_len: int = 64, algorithm: str = "fedp2p",
                            sync_period: int = 1, straggler_rate: float = 0.0,
                            lr: float = 5e-3, seed: int = 0,
-                           verbose: bool = True) -> Dict:
+                           counts=None, verbose: bool = True) -> Dict:
     """Paper protocol over LM clients with heterogeneous token streams.
-    ``algorithm`` is any ``repro.protocols`` registry name."""
+    ``algorithm`` is any ``repro.protocols`` registry name; ``counts``
+    carries non-uniform per-client |D_i| weights onto the mesh path."""
     cfg = get_config(arch).reduced(num_layers=2, max_d_model=128)
     model = build_model(cfg)
     fl = FLConfig(num_clusters=num_clusters, lr=lr,
                   straggler_rate=straggler_rate, sync_period=sync_period,
                   algorithm=protocols.get(algorithm).name)
-    round_fn = make_federated_round(model, fl, num_clients, local_steps,
-                                    algorithm=algorithm)
+    engine = MeshEngine(model, fl, num_clients, local_steps,
+                        algorithm=algorithm, counts=counts)
     params = model.init(jax.random.PRNGKey(seed))
     f_params = broadcast_to_clients(params, num_clients)
-    # non-IID: each client gets a stream with a different successor table
+    # non-IID: each client gets a stream with a different successor table.
+    # Batches are staged in sync_period-aligned chunks of ~64 rounds
+    # ([n, D, steps, B, S]) so staging memory stays bounded in T while each
+    # chunk still runs as one scan-compiled program (at most two compiled
+    # shapes: the full chunk and the final remainder).
     streams = [token_stream_batches(cfg.vocab_size, batch, seq_len, seed=100 + c)
                for c in range(num_clients)]
+    sp = max(1, sync_period)
+    chunk_rounds = max(sp, (64 // sp) * sp)
     key = jax.random.PRNGKey(seed + 1)
     losses = []
-    for t in range(rounds):
-        key, ks = jax.random.split(key)
-        bt = {k: jnp.stack([jnp.stack([jnp.asarray(next(streams[c])[k])
-                                       for _ in range(local_steps)])
-                            for c in range(num_clients)])
+    done = 0
+    while done < rounds:
+        n = min(chunk_rounds, rounds - done)
+        staged = [[[next(streams[c]) for _ in range(local_steps)]
+                   for c in range(num_clients)] for _ in range(n)]
+        bt = {k: jnp.asarray(np.stack([[np.stack([s[k] for s in client])
+                                        for client in rnd] for rnd in staged]))
               for k in ("tokens", "labels")}
-        survive = straggler_mask(ks, num_clients, straggler_rate)
-        do_sync = (t + 1) % sync_period == 0
-        f_params, loss = round_fn(f_params, bt, survive,
-                                  do_global_sync=bool(do_sync))
-        losses.append(float(loss))
-        if verbose and (t + 1) % 5 == 0:
-            print(f"  [{algorithm}] round {t+1:4d} loss={losses[-1]:.4f}")
+        key, kc = jax.random.split(key)
+        f_params, loss_buf = engine.run_rounds(f_params, kc, n, bt)
+        losses.extend(float(x) for x in np.asarray(loss_buf))
+        done += n
+    if verbose:
+        for t in range(4, rounds, 5):
+            print(f"  [{algorithm}] round {t+1:4d} loss={losses[t]:.4f}")
     return {"losses": losses, "final_loss": losses[-1],
             "first_loss": losses[0]}
 

@@ -2,19 +2,30 @@
 
     proto = protocols.get("fedp2p")
     sel, cids = proto.partition(key, fl)
-    M_new, M_old = proto.mixing_matrix(survive, counts, cids, True,
-                                       num_clusters=fl.num_clusters)
-    seconds = proto.comm_time(comm_params, P)
+    ctx = protocols.make_context(key=k_round, survive=survive, counts=counts,
+                                 cluster_ids=cids, num_clusters=fl.num_clusters)
+    M_new, M_old = proto.mixing_matrix(ctx)
+    seconds = proto.comm_time(comm_params, P, ctx=ctx)
 
 One object per algorithm carries its selection rule, its dense oracle mixing
 form, its production shard_map lowering, and its §3.2 cost model (see
-``base.Protocol``). The simulator, the mesh round builder, and every
+``base.Protocol``); every per-round method consumes a single ``RoundContext``
+record (round key, straggler mask, |D_i| counts, cluster assignment, static
+topology/mesh metadata — see ``context``). The engines in ``engine``
+(``DenseEngine`` dense oracle, ``MeshEngine`` production shard_map) drive
+any registered protocol through the context and scan-compile whole training
+loops (``run_rounds``). The simulator, the mesh round builder, and every
 benchmark dispatch exclusively through ``get``/``resolve`` — a new strategy
-is one file defining a Protocol subclass plus one ``register`` call.
+is one file defining a Protocol subclass plus one ``register`` call, even a
+stochastic one (``gossip_async`` draws a fresh random matching from
+``ctx.key`` every round).
 """
 from repro.protocols.base import (  # noqa: F401
     Protocol, get, names, register, resolve, unregister,
 )
+from repro.protocols.context import RoundContext, make_context  # noqa: F401
+from repro.protocols.async_gossip import AsyncGossip
+from repro.protocols.engine import DenseEngine, MeshEngine  # noqa: F401
 from repro.protocols.fedavg import FedAvg
 from repro.protocols.fedp2p import FedP2P
 from repro.protocols.gossip import DecentralizedGossip
@@ -24,8 +35,11 @@ register(FedAvg())
 register(FedP2P())
 register(DecentralizedGossip())
 register(TopologyAwareFedP2P())
+register(AsyncGossip())
 
 __all__ = [
     "Protocol", "register", "unregister", "get", "names", "resolve",
+    "RoundContext", "make_context", "DenseEngine", "MeshEngine",
     "FedAvg", "FedP2P", "DecentralizedGossip", "TopologyAwareFedP2P",
+    "AsyncGossip",
 ]

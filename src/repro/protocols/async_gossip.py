@@ -1,0 +1,156 @@
+"""AsyncGossip — per-round *random* pairwise matchings, drawn from the round
+key. Impossible under the old keyless Protocol API; one file under the new
+``RoundContext`` one.
+
+Every round a fresh perfect matching of the D participants is sampled from
+``ctx.key`` and each matched pair averages models (a straggler contributes
+its OLD params — its update "never arrived"). Over rounds the expected
+mixing operator is a dense doubly stochastic matrix, so consensus contracts
+without any fixed ring schedule or server step — the asynchronous-gossip
+regime ROADMAP calls for, and the D2D exchange pattern of wireless
+collaborative-FL work (arXiv:2006.02499).
+
+The matching is drawn uniformly from the *round-robin 1-factorization* of
+K_D (the circle method): R = D-1 (D even) or D (D odd, one bye per round)
+perfect matchings that jointly cover every pair exactly once. Restricting
+randomness to this static family is what makes the production lowering
+possible: each matching has a fixed ``axis_index_groups`` partition, so the
+mesh path is a ``lax.switch`` over R grouped-psum branches indexed by the
+key-derived draw — O(leaf) memory per device, pure device-device traffic —
+while the dense oracle indexes a precomputed [R, D, D] matching-matrix stack
+with the *same* draw, keeping the two lowerings numerically identical.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core.comm_model import CommParams, allreduce_time
+from repro.core.topology import Topology
+from repro.protocols.base import Protocol
+from repro.protocols.context import RoundContext
+
+
+@functools.lru_cache(maxsize=None)
+def round_robin_matchings(D: int) -> tuple:
+    """The circle-method 1-factorization of K_D: a tuple of R perfect
+    matchings (each a tuple of pair/singleton groups, jointly partitioning
+    range(D)), covering every unordered pair exactly once across rounds.
+    R = D-1 for even D; R = D for odd D (one bye — a singleton — per round).
+    """
+    if D <= 1:
+        return (((0,),),) if D == 1 else ()
+    n = D if D % 2 == 0 else D + 1      # pad odd D with a dummy node
+    rounds: List[tuple] = []
+    for r in range(n - 1):
+        groups: List[tuple] = []
+        a, b = n - 1, r
+        if a < D and b < D:
+            groups.append((min(a, b), max(a, b)))
+        elif b < D:
+            groups.append((b,))          # paired with the dummy -> bye
+        for k in range(1, n // 2):
+            a, b = (r + k) % (n - 1), (r - k) % (n - 1)
+            groups.append((min(a, b), max(a, b)))
+        rounds.append(tuple(sorted(groups)))
+    return tuple(rounds)
+
+
+@functools.lru_cache(maxsize=None)
+def matching_matrix_stack(D: int) -> np.ndarray:
+    """[R, D, D] stack: entry r is the symmetric doubly stochastic averaging
+    matrix of the r-th round-robin matching."""
+    matchings = round_robin_matchings(D)
+    Ws = np.zeros((len(matchings), D, D), np.float32)
+    for r, groups in enumerate(matchings):
+        for g in groups:
+            for i in g:
+                for j in g:
+                    Ws[r, i, j] = 1.0 / len(g)
+    return Ws
+
+
+class AsyncGossip(Protocol):
+    name = "gossip_async"
+
+    def num_participants(self, fl: FLConfig) -> int:
+        return fl.participation
+
+    def num_clusters(self, fl: FLConfig) -> int:
+        # pairwise: every participant is its own cluster, pairs vary by round
+        return fl.participation
+
+    def partition(self, key, fl: FLConfig,
+                  topology: Optional[Topology] = None):
+        sel = self.select_participants(key, fl)
+        return sel, jnp.arange(fl.participation, dtype=jnp.int32)
+
+    def mesh_cluster_ids(self, num_clients_dev: int, fl: FLConfig) -> np.ndarray:
+        return np.arange(num_clients_dev, dtype=np.int32)
+
+    # ------------------------------------------------------------------
+    def _draw(self, ctx: RoundContext, num_matchings: int) -> jnp.ndarray:
+        """The round's matching index — the ONE sample both lowerings share."""
+        if ctx.key is None:
+            raise ValueError(
+                f"protocol {self.name!r} is stochastic: build the "
+                "RoundContext with an explicit per-round key "
+                "(make_context(key=...)), or the matching would silently "
+                "repeat every round")
+        return jax.random.randint(ctx.key, (), 0, num_matchings)
+
+    def mixing_matrix(self, ctx: RoundContext):
+        # ctx.counts ignored (pairwise exchanges are plain means);
+        # ctx.do_global_sync ignored (no server step).
+        D = int(ctx.survive.shape[0])
+        Ws = jnp.asarray(matching_matrix_stack(D))
+        W = jnp.take(Ws, self._draw(ctx, Ws.shape[0]), axis=0)
+        s = ctx.survive.astype(jnp.float32)
+        M_new = W * s[None, :]
+        M_old = W * (1.0 - s)[None, :]
+        return M_new, M_old
+
+    # ------------------------------------------------------------------
+    def psum_mix(self, f_new, f_old, ctx: RoundContext):
+        D = self.static_num_clients(ctx)
+        names = ctx.mesh_info.dp_axes
+        matchings = round_robin_matchings(D)
+        r = self._draw(ctx, len(matchings))
+
+        def branch(groups):
+            gl = [list(g) for g in groups]
+
+            def exchange(eff):
+                q = jax.lax.psum(jnp.ones(()), names, axis_index_groups=gl)
+                return jax.lax.psum(eff / q, names, axis_index_groups=gl)
+
+            return exchange
+
+        branches = [branch(g) for g in matchings]
+
+        def local_fn(x_new, x_old, s, c, r):
+            s = s.reshape(())
+            r = r.reshape(())
+
+            def leaf(new, old):
+                # straggler's effective model is its old params
+                eff = s * new.astype(jnp.float32) \
+                    + (1.0 - s) * old.astype(jnp.float32)
+                return jax.lax.switch(r, branches, eff).astype(new.dtype)
+
+            return jax.tree.map(leaf, x_new, x_old)
+
+        return self._shard_mix(local_fn, f_new, f_old, ctx, r)
+
+    # ------------------------------------------------------------------
+    def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
+                  ctx: Optional[RoundContext] = None) -> float:
+        """One pairwise phase, all pairs in parallel (half the traffic of the
+        two-phase ring gossip): an n=2 ring allreduce over a device-device
+        link. No server term, no dependence on P."""
+        return allreduce_time(p.model_bytes, 2, p.device_bw)

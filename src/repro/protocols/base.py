@@ -1,8 +1,8 @@
 """The pluggable federated-learning Protocol interface + registry.
 
 The paper's contribution is a *family* of decentralization strategies
-(FedAvg -> FedP2P -> topology-aware FedP2P -> pure gossip); this module makes
-each strategy a single object that carries
+(FedAvg -> FedP2P -> topology-aware FedP2P -> gossip -> async gossip); this
+module makes each strategy a single object that carries
 
   * its client-selection / cluster-formation rule (``select_participants`` /
     ``partition``),
@@ -12,10 +12,24 @@ each strategy a single object that carries
     program (``psum_mix`` — the mesh path),
   * and its §3.2 analytic communication-cost model (``comm_time``).
 
-``Simulator`` (CPU paper reproduction), ``core.fedp2p.make_federated_round``
-(production mesh), and the benchmarks all dispatch exclusively through
-``get(name)`` — adding an algorithm is one new file plus one ``register``
-call; nothing in the engine layers changes.
+Every per-round method consumes a single ``RoundContext`` record
+(``protocols.context``) carrying the round's PRNG key, straggler mask,
+per-client data weights, cluster assignment, and the static
+topology/mesh metadata:
+
+    ctx = make_context(key=k, survive=s, counts=c, cluster_ids=ids,
+                       num_clusters=L, do_global_sync=True)
+    M_new, M_old = proto.mixing_matrix(ctx)
+    f_out = proto.psum_mix(f_new, f_old, ctx)          # ctx.mesh_info set
+    seconds = proto.comm_time(p, P, ctx=ctx)           # ctx.topology read
+
+The engines in ``protocols.engine`` (``DenseEngine`` for the simulator /
+oracle path, ``MeshEngine`` for the production shard_map path) build the
+context each round and drive any registered protocol through it — adding an
+algorithm is one new file plus one ``register`` call; nothing in the engine
+layers changes. Because the context carries a per-round key, *stochastic*
+protocols (fresh random matchings every round — see ``async_gossip``) work
+on both paths, which the old keyless positional API could not express.
 
 Mixing-matrix convention (shared by both lowerings):
 
@@ -28,6 +42,7 @@ never to zeros).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -38,6 +53,7 @@ from repro.config import FLConfig
 from repro.core.comm_model import CommParams
 from repro.core.partition import sample_participants
 from repro.core.topology import Topology
+from repro.protocols.context import RoundContext, make_context  # noqa: F401
 from repro.sharding.compat import shard_map
 
 
@@ -85,28 +101,28 @@ class Protocol:
     # ------------------------------------------------------------------
     # aggregation semantics — dense oracle form
     # ------------------------------------------------------------------
-    def mixing_matrix(self, survive: jnp.ndarray, counts: jnp.ndarray,
-                      cluster_ids: jnp.ndarray, do_global_sync: bool,
-                      *, num_clusters: Optional[int] = None
+    def mixing_matrix(self, ctx: RoundContext
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(M_new, M_old), each [D, D]: f_out = M_new @ f_new + M_old @ f_old.
 
-        survive: [D] 0/1 straggler mask; counts: [D] per-client data weights
-        (|D_i|); cluster_ids: [D]; num_clusters must be passed when
-        cluster_ids is a tracer (it is a static shape parameter).
+        Reads ``ctx.survive`` ([D] 0/1 straggler mask), ``ctx.counts``
+        ([D] per-client data weights |D_i|), ``ctx.cluster_ids`` ([D]),
+        ``ctx.num_clusters`` (static L), ``ctx.do_global_sync``, and — for
+        stochastic protocols — ``ctx.key``.
         """
         raise NotImplementedError
 
     # ------------------------------------------------------------------
     # aggregation semantics — hierarchical mesh lowering
     # ------------------------------------------------------------------
-    def psum_mix(self, f_new, f_old, survive: jnp.ndarray,
-                 do_global_sync: bool, *, mesh_info,
-                 cluster_ids: np.ndarray):
-        """shard_map realization of ``mixing_matrix`` on the production mesh:
-        one client per data-axis slice, O(leaf) memory per device (vs the
-        O(D·leaf) gather the dense [D, D] contraction degenerates to under
-        GSPMD). Must agree numerically with the dense form.
+    def psum_mix(self, f_new, f_old, ctx: RoundContext):
+        """shard_map realization of ``mixing_matrix`` on the production mesh
+        (``ctx.mesh_info``): one client per data-axis slice, O(leaf) memory
+        per device (vs the O(D·leaf) gather the dense [D, D] contraction
+        degenerates to under GSPMD). ``ctx.cluster_ids`` must be concrete
+        (numpy) here — mesh lowerings build static ``axis_index_groups``
+        from it. Must agree numerically with the dense form, including under
+        non-uniform ``ctx.counts``.
         """
         raise NotImplementedError
 
@@ -114,9 +130,10 @@ class Protocol:
     # §3.2 analytic communication model
     # ------------------------------------------------------------------
     def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
-                  topology: Optional[Topology] = None) -> float:
+                  ctx: Optional[RoundContext] = None) -> float:
         """Wall-clock seconds of one round's communication for P sampled
-        devices (the paper's H(·) functions)."""
+        devices (the paper's H(·) functions). Topology-aware protocols read
+        ``ctx.topology``."""
         raise NotImplementedError
 
     # ------------------------------------------------------------------
@@ -135,33 +152,37 @@ class Protocol:
         return jax.tree.map(leaf, f_new, f_old)
 
     @staticmethod
-    def _shard_mix(local_fn, f_new, f_old, survive, mesh_info):
-        """Run ``local_fn(x_new, x_old, s) -> x_out`` under shard_map with
-        every leaf sharded along the data axes (the federated client axis)."""
+    def _shard_mix(local_fn, f_new, f_old, ctx: RoundContext, *extras):
+        """Run ``local_fn(x_new, x_old, s, c, *extras) -> x_out`` under
+        shard_map with every leaf sharded along the data axes (the federated
+        client axis). ``s``/``c`` are this device's survive/count slices;
+        ``extras`` are replicated scalars (e.g. a matching index drawn from
+        ``ctx.key``)."""
         from jax.sharding import PartitionSpec as P
+        mesh_info = ctx.mesh_info
         names = mesh_info.dp_axes
         axes = names if len(names) > 1 else names[0]
         spec = jax.tree.map(lambda _: P(axes), f_new)
         sspec = P(axes)
         fn = shard_map(local_fn, mesh=mesh_info.mesh,
-                       in_specs=(spec, spec, sspec), out_specs=spec,
-                       check_vma=False)
-        return fn(f_new, f_old, survive)
+                       in_specs=(spec, spec, sspec, sspec)
+                                + (P(),) * len(extras),
+                       out_specs=spec, check_vma=False)
+        return fn(f_new, f_old, ctx.survive, ctx.counts, *extras)
 
     @staticmethod
-    def _groups_from_ids(cluster_ids: np.ndarray):
+    def _groups_from_ids(cluster_ids):
         """axis_index_groups (one group per cluster) from a static [D]
-        assignment."""
+        assignment. Raises on traced ids — mesh lowerings need a concrete
+        cluster layout."""
         ids = np.asarray(cluster_ids)
         L = int(ids.max()) + 1 if ids.size else 1
         return [np.nonzero(ids == c)[0].tolist() for c in range(L)]
 
     @staticmethod
-    def resolve_num_clusters(cluster_ids, num_clusters: Optional[int]) -> int:
-        if num_clusters is not None:
-            return int(num_clusters)
-        ids = np.asarray(cluster_ids)   # raises on tracers — pass num_clusters
-        return int(ids.max()) + 1 if ids.size else 1
+    def static_num_clients(ctx: RoundContext) -> int:
+        """D as a static int, from the concrete mesh cluster assignment."""
+        return int(np.asarray(ctx.cluster_ids).shape[0])
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +226,18 @@ def get(name: str) -> Protocol:
 def resolve(name: str, topology_aware: bool = False) -> Protocol:
     """Map an ``FLConfig`` (algorithm, topology_aware) pair to a protocol:
     ``topology_aware=True`` upgrades ``name`` to ``name + '_topo'`` when such
-    a variant is registered."""
-    if topology_aware and f"{name}_topo" in _REGISTRY:
-        name = f"{name}_topo"
+    a variant is registered. When it is NOT, and the base protocol is not
+    itself topology-aware, the flag would silently do nothing — we warn so
+    ``gossip`` + ``topology_aware=True`` is never a silent no-op."""
+    if topology_aware:
+        if f"{name}_topo" in _REGISTRY:
+            return get(f"{name}_topo")
+        proto = get(name)
+        if not proto.needs_topology:
+            warnings.warn(
+                f"topology_aware=True has no effect for protocol {name!r}: "
+                f"no {name + '_topo'!r} variant is registered and {name!r} "
+                f"is not topology-aware itself",
+                UserWarning, stacklevel=2)
+        return proto
     return get(name)

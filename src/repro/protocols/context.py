@@ -1,0 +1,119 @@
+"""RoundContext — the single per-round record every Protocol method consumes.
+
+PR 1's Protocol API threaded a growing list of positional arrays
+(``survive, counts, cluster_ids, do_global_sync, num_clusters=...``) through
+``mixing_matrix``/``psum_mix``, with no PRNG key anywhere — so stochastic
+protocols (random matchings, random participation) and round-varying
+topologies were inexpressible on the production path. ``RoundContext``
+replaces that argument soup with one pytree record:
+
+  data fields (traced; participate in jit/vmap/scan)
+    * ``key``          — this round's PRNG key; stochastic protocols (e.g.
+                         ``gossip_async``) draw their round-varying mixing
+                         structure from it,
+    * ``round_index``  — scalar int32 round counter ``t``,
+    * ``survive``      — [D] 0/1 straggler mask,
+    * ``counts``       — [D] per-client data weights |D_i|,
+    * ``cluster_ids``  — [D] cluster assignment. On the dense/oracle path
+                         this may be a traced array; mesh lowerings that
+                         build static ``axis_index_groups`` require it
+                         concrete (numpy), which engines guarantee by
+                         closing over the static assignment.
+
+  meta fields (static; hashable aux data of the pytree)
+    * ``num_clusters``   — L, the static shape parameter behind cluster_ids,
+    * ``do_global_sync`` — whether this round runs the server/global step,
+    * ``topology``       — optional ``core.topology.Topology`` for hop-aware
+                           protocols (cost models, partitioners),
+    * ``mesh_info``      — optional ``sharding.rules.MeshInfo``; presence
+                           selects the shard_map lowering in engines.
+
+Contexts are normally constructed *inside* a traced round program (see
+``protocols.engine``), so the static fields never need to cross a jit
+boundary as arguments. ``make_context`` fills sensible defaults so cost-model
+queries can say ``make_context(topology=topo)`` and nothing else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+@dataclass(frozen=True)
+class RoundContext:
+    # --- data fields (traced) ------------------------------------------
+    key: Any                      # PRNG key for this round's stochasticity
+    round_index: Any              # scalar int32 round counter
+    survive: Any                  # [D] 0/1 straggler mask
+    counts: Any                   # [D] per-client data weights |D_i|
+    cluster_ids: Any              # [D] cluster assignment
+    # --- meta fields (static) ------------------------------------------
+    num_clusters: int = 1
+    do_global_sync: bool = True
+    topology: Optional[Topology] = None
+    mesh_info: Any = None
+
+    @property
+    def num_clients(self) -> int:
+        """D — the size of the client axis this round mixes over."""
+        return int(self.survive.shape[0])
+
+    def replace(self, **changes) -> "RoundContext":
+        return dataclasses.replace(self, **changes)
+
+
+jax.tree_util.register_dataclass(
+    RoundContext,
+    data_fields=("key", "round_index", "survive", "counts", "cluster_ids"),
+    meta_fields=("num_clusters", "do_global_sync", "topology", "mesh_info"),
+)
+
+
+def make_context(*, key=None, round_index=0, survive=None, counts=None,
+                 cluster_ids=None, num_clusters: Optional[int] = None,
+                 do_global_sync: bool = True, topology: Optional[Topology] = None,
+                 mesh_info=None, num_clients: Optional[int] = None
+                 ) -> RoundContext:
+    """Build a RoundContext, defaulting every unspecified field.
+
+    D is inferred from (in order) ``survive``, ``counts``, ``cluster_ids``,
+    or ``num_clients`` (default 1). ``num_clusters`` defaults to
+    ``max(cluster_ids) + 1`` when the ids are concrete; traced ids require
+    an explicit value. ``key`` stays ``None`` when omitted — deterministic
+    protocols never read it, and stochastic ones (e.g. ``gossip_async``)
+    raise rather than silently reusing one fixed draw every round.
+    """
+    D = num_clients
+    if D is None:
+        for arr in (survive, counts, cluster_ids):
+            if arr is not None:
+                D = int(arr.shape[0])
+                break
+        else:
+            D = 1
+    if survive is None:
+        survive = jnp.ones((D,), jnp.float32)
+    if counts is None:
+        counts = jnp.ones((D,), jnp.float32)
+    if cluster_ids is None:
+        cluster_ids = jnp.zeros((D,), jnp.int32)
+    if num_clusters is None:
+        try:
+            ids = np.asarray(cluster_ids)
+        except Exception as e:      # traced ids can't imply the static L
+            raise ValueError(
+                "num_clusters must be passed explicitly when cluster_ids is "
+                "a traced array (it is a static shape parameter)") from e
+        num_clusters = int(ids.max()) + 1 if ids.size else 1
+    return RoundContext(
+        key=key, round_index=jnp.asarray(round_index, jnp.int32),
+        survive=survive, counts=counts, cluster_ids=cluster_ids,
+        num_clusters=int(num_clusters), do_global_sync=bool(do_global_sync),
+        topology=topology, mesh_info=mesh_info)

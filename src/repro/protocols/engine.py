@@ -1,0 +1,342 @@
+"""Unified round engines: one RoundContext-driven loop for both execution
+layers.
+
+``DenseEngine`` (simulator / CPU oracle: the paper's own model classes,
+dense [P, P] mixing) and ``MeshEngine`` (production shard_map: one client
+per data-axis slice, grouped psums) drive ANY registered protocol through
+the same per-round recipe —
+
+    build RoundContext  ->  local training  ->  protocol mixing
+
+— and both expose ``run_rounds``, which compiles the WHOLE T-round training
+loop into a single ``jax.lax.scan`` with on-device metric buffers. That
+eliminates the per-round Python dispatch and per-metric ``float()`` host
+syncs of the old ``Simulator.run`` loop: one jitted program per (protocol,
+T) instead of 3T host round-trips. ``run_rounds`` is round-for-round
+IDENTICAL to driving ``round_fn`` (+ ``evaluate``) from Python — pinned
+bit-for-bit by tests/test_engine.py.
+
+Because every round builds a fresh ``RoundContext`` (with a per-round PRNG
+key and round index), stochastic protocols like ``gossip_async`` get new
+mixing structure each scan iteration on both engines — the thing the old
+positional API could not express on the production path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FLConfig
+from repro.configs.paper_models import PaperNetConfig
+from repro.core.straggler import straggler_mask
+from repro.core.topology import Topology
+from repro.models.paper_nets import (
+    init_paper_net, paper_net_accuracy, paper_net_loss,
+)
+from repro.protocols.base import Protocol, get
+from repro.protocols.context import make_context
+
+
+# ---------------------------------------------------------------------------
+# Client-local training (vmapped) — simulator / paper-net path
+# ---------------------------------------------------------------------------
+
+def make_local_trainer(net: PaperNetConfig, fl: FLConfig):
+    """Returns f(params, cx, cy, cmask, key) -> (params', mean_loss) for ONE
+    client; callers vmap it over participants."""
+    O = fl.batch_size
+
+    def local_train(params, cx, cy, cmask, key):
+        n_max = cy.shape[0]
+        steps = max(1, -(-n_max // O))               # ceil
+
+        def epoch(carry, ekey):
+            params, loss_sum, cnt = carry
+            perm = jax.random.permutation(ekey, n_max)
+
+            def step(carry, s):
+                params, loss_sum, cnt = carry
+                idx = jnp.take(perm, (jnp.arange(O) + s * O) % n_max)
+                batch = {"x": cx[idx], "y": cy[idx], "mask": cmask[idx]}
+                loss, grads = jax.value_and_grad(paper_net_loss)(params, batch, net)
+                params = jax.tree.map(
+                    lambda p, g: p - fl.lr * g.astype(p.dtype), params, grads)
+                return (params, loss_sum + loss, cnt + 1), None
+
+            (params, loss_sum, cnt), _ = jax.lax.scan(
+                step, (params, loss_sum, cnt), jnp.arange(steps))
+            return (params, loss_sum, cnt), None
+
+        ekeys = jax.random.split(key, fl.local_epochs)
+        (params, loss_sum, cnt), _ = jax.lax.scan(
+            epoch, (params, jnp.zeros(()), jnp.zeros(())), ekeys)
+        return params, loss_sum / jnp.maximum(cnt, 1.0)
+
+    return local_train
+
+
+def _gather_clients(data_dev, sel):
+    return (jnp.take(data_dev["x"], sel, axis=0),
+            jnp.take(data_dev["y"], sel, axis=0),
+            jnp.take(data_dev["mask"], sel, axis=0),
+            jnp.take(data_dev["counts"], sel, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Dense engine — simulator / oracle path
+# ---------------------------------------------------------------------------
+
+class DenseEngine:
+    """Drives one protocol's rounds through the dense mixing-matrix oracle on
+    the paper's own model classes (§4.2).
+
+    One round (``round_fn``):
+
+      1. partition  — the protocol picks P participants and their clusters;
+      2. local SGD  — vmapped over participants;
+      3. mixing     — the protocol's dense (M_new, M_old) form via a fresh
+         ``RoundContext``; with ``sync_period > 1`` intermediate sub-rounds
+         mix WITHOUT the global step;
+      4. collapse   — the reported global model is the mean over the mixed
+         client models (exact for server protocols, whose rows agree; the
+         standard consensus-average readout for gossip).
+
+    ``run_rounds(params, key, T)`` scan-compiles T rounds + per-round
+    evaluation into one program with on-device [T] metric buffers.
+    """
+
+    def __init__(self, net: PaperNetConfig, data_dev: Dict, fl: FLConfig,
+                 proto: Protocol, topology: Optional[Topology] = None):
+        self.net, self.fl, self.proto = net, fl, proto
+        self.topology = topology
+        self.data_dev = data_dev
+        local_train = make_local_trainer(net, fl)
+        self._vtrain = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))
+        self._vtrain_per = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0))
+        self._veval = jax.vmap(self._eval_one, in_axes=(None, 0, 0, 0))
+        #: jitted (params, key[, round_index]) -> (params', mean_loss)
+        self.round_fn = jax.jit(self._round)
+        #: jitted params -> (sample-weighted acc, client-mean acc)
+        self.evaluate = jax.jit(self._eval)
+        self._run_cache: Dict[int, callable] = {}
+
+    def init_params(self, seed: int = 0):
+        return init_paper_net(jax.random.PRNGKey(seed), self.net)
+
+    # -- evaluation ----------------------------------------------------
+    def _eval_one(self, params, tx, ty, tm):
+        acc = paper_net_accuracy(params, {"x": tx, "y": ty, "mask": tm},
+                                 self.net)
+        return acc, jnp.sum(tm)
+
+    def _eval(self, params):
+        accs, ns = self._veval(params, self.data_dev["test_x"],
+                               self.data_dev["test_y"],
+                               self.data_dev["test_mask"])
+        sample_weighted = jnp.sum(accs * ns) / jnp.maximum(jnp.sum(ns), 1.0)
+        client_mean = jnp.mean(accs)
+        return sample_weighted, client_mean
+
+    # -- one round -----------------------------------------------------
+    def _round(self, params, key, round_index=0):
+        proto, fl = self.proto, self.fl
+        P = proto.num_participants(fl)
+        L = proto.num_clusters(fl)
+        k_sel, k_tr, k_str, k_mix = jax.random.split(key, 4)
+        sel, cids = proto.partition(k_sel, fl, self.topology)
+        cx, cy, cm, counts = _gather_clients(self.data_dev, sel)
+        smask = straggler_mask(k_str, P, fl.straggler_rate)
+        old = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (P,) + p.shape), params)
+
+        def ctx_for(sub_round: int, sync: bool):
+            return make_context(
+                key=jax.random.fold_in(k_mix, sub_round),
+                round_index=round_index, survive=smask, counts=counts,
+                cluster_ids=cids, num_clusters=L, do_global_sync=sync,
+                topology=self.topology)
+
+        client_params, losses = None, jnp.zeros(())
+        sub_rounds = max(1, fl.sync_period)
+        for r in range(sub_rounds):
+            keys = jax.random.split(jax.random.fold_in(k_tr, r), P)
+            if client_params is None:
+                client_params, losses = self._vtrain(params, cx, cy, cm, keys)
+            else:
+                M_new, M_old = proto.mixing_matrix(ctx_for(r, False))
+                start = proto.apply_mixing(M_new, M_old, client_params, old)
+                client_params, losses = self._vtrain_per(start, cx, cy, cm, keys)
+
+        M_new, M_old = proto.mixing_matrix(ctx_for(sub_rounds, True))
+        mixed = proto.apply_mixing(M_new, M_old, client_params, old)
+        new_params = jax.tree.map(lambda x: jnp.mean(x, axis=0), mixed)
+        return new_params, jnp.mean(losses)
+
+    # -- the scan-compiled training loop -------------------------------
+    def run_rounds(self, params, key, T: int, eval_every: int = 1):
+        """Run T rounds as ONE compiled ``lax.scan`` program. Returns
+        (final_params, metrics) with metrics = {'train_loss', 'acc',
+        'acc_client_mean'}, each a [T] on-device array; nothing syncs to
+        host until the caller reads the buffers. With ``eval_every > 1``
+        the accuracy entries are only computed at rounds where
+        (t+1) % eval_every == 0 (and the last round) — the other slots are
+        zeros the caller must not read."""
+        T, eval_every = int(T), max(1, int(eval_every))
+        cache_key = (T, eval_every)
+        if cache_key not in self._run_cache:
+
+            def body(carry, t):
+                params, key = carry
+                key, kr = jax.random.split(key)
+                params, loss = self._round(params, kr, t)
+                if eval_every == 1:
+                    acc_w, acc_m = self._eval(params)
+                else:
+                    acc_w, acc_m = jax.lax.cond(
+                        jnp.logical_or((t + 1) % eval_every == 0, t == T - 1),
+                        self._eval,
+                        lambda _: (jnp.zeros(()), jnp.zeros(())), params)
+                return (params, key), (loss, acc_w, acc_m)
+
+            def run(params, key):
+                (params, _), (loss, acc_w, acc_m) = jax.lax.scan(
+                    body, (params, key), jnp.arange(T))
+                return params, {"train_loss": loss, "acc": acc_w,
+                                "acc_client_mean": acc_m}
+
+            self._run_cache[cache_key] = jax.jit(run)
+        return self._run_cache[cache_key](params, key)
+
+
+# ---------------------------------------------------------------------------
+# Mesh engine — production shard_map path
+# ---------------------------------------------------------------------------
+
+class MeshEngine:
+    """Drives one protocol's rounds on the production federated state: every
+    param leaf carries a leading client axis [D, ...] sharded over the data
+    mesh axes; local SGD is a vmap over the client axis (client-diagonal, so
+    GSPMD emits zero collectives there) and mixing is the protocol's
+    ``psum_mix`` shard_map lowering when ``mesh_info`` is given, else the
+    dense [D, D] oracle.
+
+    ``counts`` carries non-uniform per-client data weights |D_i| onto the
+    production path (default: uniform).
+
+    ``round_fn(f_params, batches, survive, key, do_global_sync=...)`` is one
+    jitted round; ``run_rounds(f_params, key, T, batches)`` scan-compiles
+    the whole loop (batch leaves [T, D, steps, ...]) with ``sync_period``
+    chunking so ``do_global_sync`` stays a static program structure: global
+    sync fires when (t+1) % sync_period == 0, as in the paper.
+    """
+
+    def __init__(self, model, fl: FLConfig, num_clients_dev: int,
+                 local_steps: int, *, algorithm: str = "", counts=None,
+                 remat: bool = True, out_shardings=None, mesh_info=None):
+        self.proto = get(algorithm or fl.algorithm)
+        self.fl = fl
+        self.num_clients_dev = num_clients_dev
+        self.local_steps = local_steps
+        self.mesh_info = mesh_info
+        ids = self.proto.mesh_cluster_ids(num_clients_dev, fl)
+        self._cluster_ids = ids                      # concrete — mesh groups
+        self._num_clusters = int(ids.max()) + 1
+        self._counts = (jnp.ones((num_clients_dev,), jnp.float32)
+                        if counts is None
+                        else jnp.asarray(counts, jnp.float32))
+
+        def local_train(params, batches):
+            def step(p, b):
+                (loss, _), grads = jax.value_and_grad(
+                    functools.partial(model.loss_fn, remat=remat),
+                    has_aux=True)(p, b)
+                p = jax.tree.map(lambda w, g: (w - fl.lr * g.astype(jnp.float32)
+                                               ).astype(w.dtype), p, grads)
+                return p, loss
+
+            params, losses = jax.lax.scan(step, params, batches)
+            return params, jnp.mean(losses)
+
+        self._vlocal = jax.vmap(local_train)
+
+        jit_kwargs = {"static_argnames": ("do_global_sync",)}
+        if out_shardings is not None:
+            jit_kwargs["out_shardings"] = out_shardings
+        #: jitted (f_params, batches, survive, key[, do_global_sync,
+        #: round_index]) -> (f_params', mean_loss)
+        self.round_fn = jax.jit(self._round, **jit_kwargs)
+        self._run_jit = jax.jit(self._run)
+
+    def _ctx(self, survive, key, round_index, do_global_sync: bool):
+        return make_context(
+            key=key, round_index=round_index, survive=survive,
+            counts=self._counts, cluster_ids=self._cluster_ids,
+            num_clusters=self._num_clusters, do_global_sync=do_global_sync,
+            mesh_info=self.mesh_info)
+
+    def _round(self, f_params, batches, survive, key,
+               do_global_sync: bool = True, round_index=0):
+        f_new, losses = self._vlocal(f_params, batches)
+        ctx = self._ctx(survive, key, round_index, bool(do_global_sync))
+        if self.mesh_info is not None:
+            f_out = self.proto.psum_mix(f_new, f_params, ctx)
+        else:
+            M_new, M_old = self.proto.mixing_matrix(ctx)
+            f_out = self.proto.apply_mixing(M_new, M_old, f_new, f_params)
+        return f_out, jnp.mean(losses)
+
+    # -- the scan-compiled training loop -------------------------------
+    def _run(self, f_params, key, batches):
+        fl, D = self.fl, self.num_clients_dev
+        sp = max(1, fl.sync_period)
+        T = jax.tree.leaves(batches)[0].shape[0]     # static at trace time
+        n_chunks, rem = divmod(T, sp)
+
+        def one_round(f_params, key, b, t, sync: bool):
+            key, k_str, k_mix = jax.random.split(key, 3)
+            survive = straggler_mask(k_str, D, fl.straggler_rate)
+            f_params, loss = self._round(f_params, b, survive, k_mix,
+                                         do_global_sync=sync, round_index=t)
+            return f_params, key, loss
+
+        def body(carry, xs):
+            f_params, key = carry
+            chunk, t0 = xs
+            out = []
+            for i in range(sp):                      # unrolled: sync static
+                b_i = jax.tree.map(lambda l: l[i], chunk)
+                f_params, key, loss = one_round(f_params, key, b_i, t0 + i,
+                                                i == sp - 1)
+                out.append(loss)
+            return (f_params, key), jnp.stack(out)
+
+        main = jax.tree.map(
+            lambda l: l[:n_chunks * sp].reshape((n_chunks, sp) + l.shape[1:]),
+            batches)
+        t0s = jnp.arange(n_chunks, dtype=jnp.int32) * sp
+        (f_params, key), losses = jax.lax.scan(body, (f_params, key),
+                                               (main, t0s))
+        losses = losses.reshape((n_chunks * sp,))
+        # T % sync_period tail rounds: never hit (t+1) % sp == 0 -> no sync
+        tail = []
+        for i in range(rem):
+            b_i = jax.tree.map(lambda l: l[n_chunks * sp + i], batches)
+            f_params, key, loss = one_round(f_params, key, b_i,
+                                            n_chunks * sp + i, False)
+            tail.append(loss)
+        if tail:
+            losses = jnp.concatenate([losses, jnp.stack(tail)])
+        return f_params, losses
+
+    def run_rounds(self, f_params, key, T: int, batches):
+        """Run T rounds as one compiled scan. ``batches`` leaves are
+        [T, D, local_steps, ...]; returns (f_params, losses[T]) with the
+        loss buffer on device (no per-round host syncs)."""
+        T = int(T)
+        got = jax.tree.leaves(batches)[0].shape[0]
+        if got != T:
+            raise ValueError(f"batches carry {got} rounds, expected T={T}")
+        return self._run_jit(f_params, key, batches)

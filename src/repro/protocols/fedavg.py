@@ -1,8 +1,9 @@
 """FedAvg (paper Algo 1) on the Protocol interface.
 
 One logical cluster = everyone; the server gathers every surviving update and
-broadcasts the data-weighted average. ``do_global_sync`` is ignored — FedAvg
-has no cluster-local stage.
+broadcasts the data-weighted average. ``ctx.do_global_sync`` is ignored —
+FedAvg has no cluster-local stage. ``ctx.counts`` weights the average on both
+lowerings (|D_i|-weighted psum on the mesh).
 """
 from __future__ import annotations
 
@@ -10,12 +11,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import FLConfig
 from repro.core.comm_model import CommParams, h_fedavg
-from repro.core.topology import Topology
 from repro.protocols.base import Protocol
+from repro.protocols.context import RoundContext
 
 
 class FedAvg(Protocol):
@@ -28,11 +28,10 @@ class FedAvg(Protocol):
         return 1
 
     # ------------------------------------------------------------------
-    def mixing_matrix(self, survive, counts, cluster_ids, do_global_sync,
-                      *, num_clusters: Optional[int] = None):
-        D = survive.shape[0]
-        s = survive.astype(jnp.float32)
-        w = s * counts.astype(jnp.float32)
+    def mixing_matrix(self, ctx: RoundContext):
+        D = ctx.survive.shape[0]
+        s = ctx.survive.astype(jnp.float32)
+        w = s * ctx.counts.astype(jnp.float32)
         total = jnp.sum(w)
         coef = jnp.where(total > 0, w / jnp.maximum(total, 1e-12), 0.0)
         M_new = jnp.broadcast_to(coef[None], (D, D))
@@ -42,15 +41,14 @@ class FedAvg(Protocol):
         return M_new, M_old
 
     # ------------------------------------------------------------------
-    def psum_mix(self, f_new, f_old, survive, do_global_sync, *, mesh_info,
-                 cluster_ids):
-        D = int(np.asarray(cluster_ids).shape[0])
-        names = mesh_info.dp_axes
+    def psum_mix(self, f_new, f_old, ctx: RoundContext):
+        D = self.static_num_clients(ctx)
+        names = ctx.mesh_info.dp_axes
 
-        def local_fn(x_new, x_old, s):
-            s = s.reshape(())
-            tot = jax.lax.psum(s, names)
-            coef = jnp.where(tot > 0, s / jnp.maximum(tot, 1e-12), 0.0)
+        def local_fn(x_new, x_old, s, c):
+            w = s.reshape(()) * c.reshape(())        # |D_i|-weighted survival
+            tot = jax.lax.psum(w, names)
+            coef = jnp.where(tot > 0, w / jnp.maximum(tot, 1e-12), 0.0)
             dead = (tot == 0).astype(jnp.float32)
 
             def leaf(new, old):
@@ -60,9 +58,9 @@ class FedAvg(Protocol):
 
             return jax.tree.map(leaf, x_new, x_old)
 
-        return self._shard_mix(local_fn, f_new, f_old, survive, mesh_info)
+        return self._shard_mix(local_fn, f_new, f_old, ctx)
 
     # ------------------------------------------------------------------
     def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
-                  topology: Optional[Topology] = None) -> float:
+                  ctx: Optional[RoundContext] = None) -> float:
         return h_fedavg(p, P)

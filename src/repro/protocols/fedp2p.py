@@ -2,9 +2,10 @@
 
 Phase 1 partitions the round's L*Q participants into L local P2P networks;
 phase 2 is a data-weighted Allreduce within each network; phase 3 (when
-``do_global_sync``) is the thin server step: an unweighted mean over the
+``ctx.do_global_sync``) is the thin server step: an unweighted mean over the
 per-cluster models. Dead clusters (all members straggled) fall back to the
-mean of their members' old params, never to zeros.
+mean of their members' old params, never to zeros. ``ctx.counts`` weights
+the within-cluster stage on both lowerings.
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ from repro.core.comm_model import CommParams, h_fedp2p, min_h_fedp2p
 from repro.core.partition import random_partition
 from repro.core.topology import Topology
 from repro.protocols.base import Protocol
+from repro.protocols.context import RoundContext
 
 
 class FedP2P(Protocol):
@@ -42,22 +44,21 @@ class FedP2P(Protocol):
         return np.repeat(np.arange(L, dtype=np.int32), q)
 
     # ------------------------------------------------------------------
-    def mixing_matrix(self, survive, counts, cluster_ids, do_global_sync,
-                      *, num_clusters: Optional[int] = None):
+    def mixing_matrix(self, ctx: RoundContext):
         """Expressing the protocol as a [D, D] client-mixing matrix keeps
         every leaf sharded along the client axis end-to-end: the contraction
         over the client dim lowers to exactly the within-cluster / global
         allreduce traffic the paper analyzes."""
-        L = self.resolve_num_clusters(cluster_ids, num_clusters)
-        D = survive.shape[0]
-        s = survive.astype(jnp.float32)
-        w = s * counts.astype(jnp.float32)
-        C = jax.nn.one_hot(cluster_ids, L, dtype=jnp.float32)       # [D, L]
+        L = ctx.num_clusters
+        D = ctx.survive.shape[0]
+        s = ctx.survive.astype(jnp.float32)
+        w = s * ctx.counts.astype(jnp.float32)
+        C = jax.nn.one_hot(ctx.cluster_ids, L, dtype=jnp.float32)   # [D, L]
         denom = jnp.maximum(C.T @ w, 1e-12)                         # [L]
         alive = (C.T @ s > 0).astype(jnp.float32)                   # [L]
         # gamma_j = w_j / denom_{c(j)} — within-cluster data weights
         gamma = w * (C @ (alive / denom))                           # [D]
-        if do_global_sync:
+        if ctx.do_global_sync:
             n_alive = jnp.maximum(jnp.sum(alive), 1.0)
             coef = gamma / n_alive                                  # [D]
             M_new = jnp.broadcast_to(coef[None], (D, D))
@@ -74,21 +75,24 @@ class FedP2P(Protocol):
         return M_new, M_old
 
     # ------------------------------------------------------------------
-    def psum_mix(self, f_new, f_old, survive, do_global_sync, *, mesh_info,
-                 cluster_ids):
-        """Grouped-psum hierarchy: within-cluster Allreduce (psum with
-        axis_index_groups) + global Allreduce for the server step — the
-        literal realization of the paper's traffic pattern."""
-        names = mesh_info.dp_axes
-        groups = self._groups_from_ids(cluster_ids)
-        D = int(np.asarray(cluster_ids).shape[0])
+    def psum_mix(self, f_new, f_old, ctx: RoundContext):
+        """Grouped-psum hierarchy: within-cluster data-weighted Allreduce
+        (psum with axis_index_groups) + global Allreduce for the server step
+        — the literal realization of the paper's traffic pattern."""
+        names = ctx.mesh_info.dp_axes
+        groups = self._groups_from_ids(ctx.cluster_ids)
+        D = self.static_num_clients(ctx)
+        do_global_sync = ctx.do_global_sync
 
-        def local_fn(x_new, x_old, s):
+        def local_fn(x_new, x_old, s, c):
             s = s.reshape(())                       # this client's survival
+            w = s * c.reshape(())                   # |D_i|-weighted survival
             q = jax.lax.psum(jnp.ones(()), names, axis_index_groups=groups)
-            denom = jax.lax.psum(s, names, axis_index_groups=groups)
-            gamma = jnp.where(denom > 0, s / jnp.maximum(denom, 1e-12), 0.0)
-            alive = (denom > 0).astype(jnp.float32)
+            denom = jax.lax.psum(w, names, axis_index_groups=groups)
+            alive = (jax.lax.psum(s, names, axis_index_groups=groups) > 0
+                     ).astype(jnp.float32)
+            gamma = alive * jnp.where(denom > 0,
+                                      w / jnp.maximum(denom, 1e-12), 0.0)
             n_alive = jax.lax.psum(alive / q, names)    # each cluster q times
             keep_old = (n_alive == 0).astype(jnp.float32)
 
@@ -108,11 +112,11 @@ class FedP2P(Protocol):
 
             return jax.tree.map(leaf, x_new, x_old)
 
-        return self._shard_mix(local_fn, f_new, f_old, survive, mesh_info)
+        return self._shard_mix(local_fn, f_new, f_old, ctx)
 
     # ------------------------------------------------------------------
     def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
-                  topology: Optional[Topology] = None) -> float:
+                  ctx: Optional[RoundContext] = None) -> float:
         if L is None:
             return min_h_fedp2p(p, P)       # at the closed-form optimal L*
         return h_fedp2p(p, P, L)

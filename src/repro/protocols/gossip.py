@@ -9,7 +9,8 @@ coordinator traffic. Stragglers contribute their OLD model to their
 partners (their update "never arrived"), keeping every row convex.
 
 On the production mesh each phase is a 2-device grouped psum — pure
-device-device traffic, zero server/DCN bytes.
+device-device traffic, zero server/DCN bytes. The ring is static; for the
+*randomized* per-round matching variant see ``async_gossip``.
 """
 from __future__ import annotations
 
@@ -23,6 +24,7 @@ from repro.config import FLConfig
 from repro.core.comm_model import CommParams, allreduce_time
 from repro.core.topology import Topology
 from repro.protocols.base import Protocol
+from repro.protocols.context import RoundContext
 
 
 def _phase_groups(D: int) -> Tuple[List[List[int]], List[List[int]]]:
@@ -77,26 +79,24 @@ class DecentralizedGossip(Protocol):
         g1, g2 = _phase_groups(D)
         return _avg_matrix(D, g2) @ _avg_matrix(D, g1)
 
-    def mixing_matrix(self, survive, counts, cluster_ids, do_global_sync,
-                      *, num_clusters: Optional[int] = None):
-        # counts are ignored: gossip averaging is unweighted (each pairwise
-        # exchange is a plain mean); do_global_sync is ignored: there is no
-        # server step.
-        D = survive.shape[0]
+    def mixing_matrix(self, ctx: RoundContext):
+        # ctx.counts is ignored: gossip averaging is unweighted (each
+        # pairwise exchange is a plain mean); ctx.do_global_sync is ignored:
+        # there is no server step.
+        D = ctx.survive.shape[0]
         W = jnp.asarray(self.ring_matrix(D))
-        s = survive.astype(jnp.float32)
+        s = ctx.survive.astype(jnp.float32)
         M_new = W * s[None, :]
         M_old = W * (1.0 - s)[None, :]
         return M_new, M_old
 
     # ------------------------------------------------------------------
-    def psum_mix(self, f_new, f_old, survive, do_global_sync, *, mesh_info,
-                 cluster_ids):
-        D = int(np.asarray(cluster_ids).shape[0])
-        names = mesh_info.dp_axes
+    def psum_mix(self, f_new, f_old, ctx: RoundContext):
+        D = self.static_num_clients(ctx)
+        names = ctx.mesh_info.dp_axes
         g1, g2 = _phase_groups(D)
 
-        def local_fn(x_new, x_old, s):
+        def local_fn(x_new, x_old, s, c):
             s = s.reshape(())
 
             def leaf(new, old):
@@ -112,11 +112,11 @@ class DecentralizedGossip(Protocol):
 
             return jax.tree.map(leaf, x_new, x_old)
 
-        return self._shard_mix(local_fn, f_new, f_old, survive, mesh_info)
+        return self._shard_mix(local_fn, f_new, f_old, ctx)
 
     # ------------------------------------------------------------------
     def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
-                  topology: Optional[Topology] = None) -> float:
+                  ctx: Optional[RoundContext] = None) -> float:
         """Two pairwise phases, all pairs in parallel: each phase is an
         n=2 ring allreduce over a device-device link. No server term and no
         dependence on P."""

@@ -5,13 +5,13 @@ decisions any data-independent assignment is distributionally identical to
 the random one), but cluster formation groups the sampled devices by hop
 distance on a ``core.topology.Topology`` lattice, and the cost model prices
 each cluster's Allreduce by its slowest ring link instead of a uniform B_d.
-This is what makes ``FLConfig.topology_aware`` do something.
+This is what makes ``FLConfig.topology_aware`` do something. The topology
+reaches the cost model through ``ctx.topology``.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -20,6 +20,7 @@ from repro.core.comm_model import CommParams, optimal_L
 from repro.core.topology import (
     Topology, cluster_comm_time, grid_cluster_assignment,
 )
+from repro.protocols.context import RoundContext
 from repro.protocols.fedp2p import FedP2P
 
 
@@ -48,10 +49,11 @@ class TopologyAwareFedP2P(FedP2P):
     # groups are ICI neighbors — contiguous clusters ARE the hop-aware choice.
 
     def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
-                  topology: Optional[Topology] = None) -> float:
+                  ctx: Optional[RoundContext] = None) -> float:
         """Server term from the analytic model + the measured slowest-cluster
         ring Allreduce on the hop-aware partition (replaces the uniform
         P M / (L B_d) + 2 M / B_d device terms)."""
+        topology = ctx.topology if ctx is not None else None
         if topology is None:
             return super().comm_time(p, P, L=L)
         # the lattice has n distinct devices; price a round over min(P, n)

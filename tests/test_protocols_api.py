@@ -1,6 +1,8 @@
-"""Tests for the repro.protocols strategy API: registry round-trip, dense
-mixing_matrix vs psum_mix equivalence, gossip doubly-stochastic invariant,
-topology-aware partition gain, and simulator dispatch validation."""
+"""Tests for the repro.protocols strategy API: registry round-trip, the
+RoundContext record, dense mixing_matrix vs psum_mix equivalence, gossip /
+async-gossip invariants, convex-row property tests across the whole
+registry, topology-aware partition gain, and simulator dispatch
+validation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +12,7 @@ from repro import protocols
 from repro.config import FLConfig
 from repro.core.aggregation import cluster_then_global, weighted_average
 from repro.core.topology import cluster_comm_time, make_topology
+from repro.protocols import make_context
 
 
 # ---------------------------------------------------------------------------
@@ -17,7 +20,7 @@ from repro.core.topology import cluster_comm_time, make_topology
 # ---------------------------------------------------------------------------
 
 def test_registry_builtins_present():
-    for name in ("fedavg", "fedp2p", "gossip", "fedp2p_topo"):
+    for name in ("fedavg", "fedp2p", "gossip", "fedp2p_topo", "gossip_async"):
         assert protocols.get(name).name == name
         assert name in protocols.names()
 
@@ -45,19 +48,57 @@ def test_registry_round_trip_and_duplicate_rejected():
 def test_resolve_topology_aware_upgrade():
     assert protocols.resolve("fedp2p", topology_aware=True).name == "fedp2p_topo"
     assert protocols.resolve("fedp2p", topology_aware=False).name == "fedp2p"
-    # no _topo variant registered -> unchanged
-    assert protocols.resolve("fedavg", topology_aware=True).name == "fedavg"
+
+
+def test_resolve_topology_aware_noop_warns():
+    """No _topo variant registered and the protocol is not itself
+    topology-aware -> the flag would silently do nothing; we warn."""
+    for name in ("fedavg", "gossip", "gossip_async"):
+        with pytest.warns(UserWarning, match="no effect"):
+            assert protocols.resolve(name, topology_aware=True).name == name
+    # the base protocol IS topology-aware -> no warning
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert protocols.resolve("fedp2p_topo",
+                                 topology_aware=True).name == "fedp2p_topo"
+
+
+# ---------------------------------------------------------------------------
+# RoundContext
+# ---------------------------------------------------------------------------
+
+def test_make_context_defaults_and_replace():
+    ctx = make_context(num_clients=6)
+    assert ctx.num_clients == 6
+    assert ctx.survive.shape == (6,) and float(ctx.survive.sum()) == 6.0
+    assert ctx.counts.shape == (6,)
+    assert ctx.num_clusters == 1 and ctx.do_global_sync
+    ctx2 = ctx.replace(do_global_sync=False)
+    assert not ctx2.do_global_sync and ctx.do_global_sync
+
+
+def test_round_context_is_pytree_with_static_meta():
+    ctx = make_context(num_clients=3, num_clusters=2, do_global_sync=False)
+    leaves, treedef = jax.tree_util.tree_flatten(ctx)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.num_clusters == 2 and not rebuilt.do_global_sync
+    # static fields survive tree.map untouched; data leaves are mapped
+    doubled = jax.tree.map(lambda x: x * 2, ctx)
+    assert float(doubled.survive[0]) == 2.0
+    assert doubled.num_clusters == 2
 
 
 # ---------------------------------------------------------------------------
 # dense mixing matrices vs the aggregation oracles
 # ---------------------------------------------------------------------------
 
-def _mix_rows(proto, survive, counts, cids, L, sync, xs, old):
-    M_new, M_old = proto.mixing_matrix(jnp.asarray(survive),
-                                       jnp.asarray(counts),
-                                       jnp.asarray(cids), sync,
-                                       num_clusters=L)
+def _mix_rows(proto, survive, counts, cids, L, sync, xs, old, key=None):
+    ctx = make_context(key=key, survive=jnp.asarray(survive),
+                       counts=jnp.asarray(counts),
+                       cluster_ids=jnp.asarray(cids), num_clusters=L,
+                       do_global_sync=sync)
+    M_new, M_old = proto.mixing_matrix(ctx)
     out = proto.apply_mixing(M_new, M_old, {"w": jnp.asarray(xs)},
                              {"w": jnp.asarray(old)})["w"]
     return np.asarray(out), np.asarray(M_new), np.asarray(M_old)
@@ -104,6 +145,39 @@ def test_fedp2p_dead_cluster_falls_back_to_old_params():
 
 
 # ---------------------------------------------------------------------------
+# convex-row property across the WHOLE registry (random masks and counts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(protocols.names()))
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_every_protocol_rows_sum_to_one(name, seed):
+    """For every registered protocol, under random straggler masks and
+    random non-uniform counts, every output model is a convex combination:
+    rows of M_new + M_old sum to 1 (dropped updates fall back to old
+    params, never to zeros)."""
+    proto = protocols.get(name)
+    rng = np.random.default_rng(seed)
+    D, L = 8, 4
+    fl = FLConfig(num_clusters=L, participation=D)
+    cids = proto.mesh_cluster_ids(D, fl)
+    survive = (rng.random(D) > 0.4).astype(np.float32)
+    counts = rng.uniform(0.5, 9.0, D).astype(np.float32)
+    for sync in (True, False):
+        ctx = make_context(key=jax.random.PRNGKey(seed),
+                           survive=jnp.asarray(survive),
+                           counts=jnp.asarray(counts),
+                           cluster_ids=jnp.asarray(cids),
+                           num_clusters=int(cids.max()) + 1,
+                           do_global_sync=sync)
+        M_new, M_old = proto.mixing_matrix(ctx)
+        rows = np.asarray(M_new + M_old).sum(1)
+        np.testing.assert_allclose(rows, 1.0, atol=1e-5,
+                                   err_msg=f"{name} sync={sync}")
+        assert np.asarray(M_new).min() >= -1e-6
+        assert np.asarray(M_old).min() >= -1e-6
+
+
+# ---------------------------------------------------------------------------
 # gossip invariants
 # ---------------------------------------------------------------------------
 
@@ -115,8 +189,9 @@ def test_gossip_mixing_doubly_stochastic(D):
     np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
     assert np.all(W >= 0)
     # with every client surviving, M_new is exactly W and M_old vanishes
-    M_new, M_old = g.mixing_matrix(jnp.ones(D), jnp.ones(D),
-                                   jnp.arange(D), False)
+    M_new, M_old = g.mixing_matrix(make_context(
+        survive=jnp.ones(D), counts=jnp.ones(D),
+        cluster_ids=jnp.arange(D), num_clusters=D, do_global_sync=False))
     np.testing.assert_allclose(np.asarray(M_new), W, atol=1e-6)
     assert float(jnp.abs(M_old).max()) == 0.0
 
@@ -124,7 +199,9 @@ def test_gossip_mixing_doubly_stochastic(D):
 def test_gossip_straggler_rows_stay_convex():
     g = protocols.get("gossip")
     survive = jnp.asarray(np.array([1, 0, 1, 0, 1, 1], np.float32))
-    M_new, M_old = g.mixing_matrix(survive, jnp.ones(6), jnp.arange(6), True)
+    M_new, M_old = g.mixing_matrix(make_context(
+        survive=survive, counts=jnp.ones(6), cluster_ids=jnp.arange(6),
+        num_clusters=6, do_global_sync=True))
     np.testing.assert_allclose(np.asarray(M_new + M_old).sum(1), 1.0,
                                atol=1e-6)
     # a straggler's NEW model reaches nobody
@@ -137,25 +214,140 @@ def test_gossip_preserves_mean():
     g = protocols.get("gossip")
     rng = np.random.default_rng(3)
     xs = rng.normal(size=(8, 5)).astype(np.float32)
-    M_new, M_old = g.mixing_matrix(jnp.ones(8), jnp.ones(8), jnp.arange(8),
-                                   False)
+    M_new, M_old = g.mixing_matrix(make_context(
+        survive=jnp.ones(8), counts=jnp.ones(8), cluster_ids=jnp.arange(8),
+        num_clusters=8, do_global_sync=False))
     out = g.apply_mixing(M_new, M_old, {"w": jnp.asarray(xs)},
                          {"w": jnp.zeros_like(xs)})["w"]
     np.testing.assert_allclose(np.asarray(out).mean(0), xs.mean(0),
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("name", ["gossip", "gossip_async"])
+def test_gossip_rounds_contract_toward_consensus(name):
+    """Repeated (async-)gossip rounds shrink client disagreement: the spread
+    around the (conserved) mean decays toward consensus."""
+    proto = protocols.get(name)
+    rng = np.random.default_rng(4)
+    D = 8
+    xs = jnp.asarray(rng.normal(size=(D, 5)).astype(np.float32))
+    mean0 = np.asarray(xs).mean(0)
+
+    def spread(x):
+        return float(np.abs(np.asarray(x) - np.asarray(x).mean(0)).max())
+
+    s0 = spread(xs)
+    x = xs
+    for t in range(12):
+        ctx = make_context(key=jax.random.PRNGKey(100 + t),
+                           survive=jnp.ones(D), counts=jnp.ones(D),
+                           cluster_ids=jnp.arange(D), num_clusters=D,
+                           do_global_sync=False)
+        M_new, M_old = proto.mixing_matrix(ctx)
+        x = proto.apply_mixing(M_new, M_old, {"w": x},
+                               {"w": jnp.zeros_like(x)})["w"]
+    np.testing.assert_allclose(np.asarray(x).mean(0), mean0,
+                               rtol=1e-3, atol=1e-4)     # mean conserved
+    assert spread(x) < 0.2 * s0                          # consensus contracts
+
+
+# ---------------------------------------------------------------------------
+# async gossip: per-round random matchings from ctx.key
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("D", [2, 4, 5, 8, 9])
+def test_async_gossip_matching_symmetric_doubly_stochastic(D):
+    """Every key's matching matrix is a symmetric doubly stochastic
+    projection (pairs average; byes pass through)."""
+    g = protocols.get("gossip_async")
+    for seed in range(5):
+        ctx = make_context(key=jax.random.PRNGKey(seed),
+                           survive=jnp.ones(D), counts=jnp.ones(D),
+                           cluster_ids=jnp.arange(D), num_clusters=D,
+                           do_global_sync=False)
+        M_new, M_old = g.mixing_matrix(ctx)
+        W = np.asarray(M_new)
+        assert float(jnp.abs(M_old).max()) == 0.0
+        np.testing.assert_allclose(W, W.T, atol=1e-6)          # symmetric
+        np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-6)   # doubly
+        np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)   # stochastic
+        np.testing.assert_allclose(W @ W, W, atol=1e-6)        # projection
+        # perfect matching structure: 2x2 averaging blocks (+ maybe one bye)
+        per_row = (W > 0).sum(1)
+        assert set(per_row.tolist()) <= {1, 2}
+        assert (per_row == 1).sum() == (D % 2)
+
+
+def test_async_gossip_matchings_vary_with_key():
+    """The whole point of the keyed RoundContext: different round keys give
+    different matchings (the old keyless API could only produce one)."""
+    g = protocols.get("gossip_async")
+    D = 8
+    mats = []
+    for seed in range(10):
+        ctx = make_context(key=jax.random.PRNGKey(seed),
+                           survive=jnp.ones(D), counts=jnp.ones(D),
+                           cluster_ids=jnp.arange(D), num_clusters=D)
+        mats.append(np.asarray(g.mixing_matrix(ctx)[0]).tobytes())
+    assert len(set(mats)) > 1
+
+
+def test_async_gossip_matchings_cover_all_pairs():
+    """The round-robin 1-factorization covers every unordered pair exactly
+    once (even D) — so over rounds every client eventually talks to every
+    other."""
+    from repro.protocols.async_gossip import (
+        matching_matrix_stack, round_robin_matchings,
+    )
+    for D in (2, 4, 6, 8, 10):
+        Ws = matching_matrix_stack(D)
+        assert Ws.shape[0] == D - 1
+        off_diag_cover = (Ws > 0).sum(0) - (D - 1) * np.eye(D)
+        assert np.all(off_diag_cover[~np.eye(D, dtype=bool)] == 1)
+    for D in (3, 5, 7):                         # odd: one bye per round
+        ms = round_robin_matchings(D)
+        assert len(ms) == D
+        for m in ms:
+            assert sorted(i for g_ in m for i in g_) == list(range(D))
+            assert sum(len(g_) == 1 for g_ in m) == 1
+
+
+def test_async_gossip_requires_round_key():
+    """A keyless context would silently repeat one matching forever — the
+    stochastic protocol refuses it."""
+    g = protocols.get("gossip_async")
+    ctx = make_context(num_clients=8, cluster_ids=jnp.arange(8),
+                       num_clusters=8)
+    with pytest.raises(ValueError, match="stochastic"):
+        g.mixing_matrix(ctx)
+
+
+def test_async_gossip_straggler_contributes_old_model():
+    g = protocols.get("gossip_async")
+    D = 6
+    survive = jnp.asarray(np.array([1, 1, 0, 1, 1, 1], np.float32))
+    ctx = make_context(key=jax.random.PRNGKey(0), survive=survive,
+                       counts=jnp.ones(D), cluster_ids=jnp.arange(D),
+                       num_clusters=D)
+    M_new, M_old = g.mixing_matrix(ctx)
+    np.testing.assert_allclose(np.asarray(M_new + M_old).sum(1), 1.0,
+                               atol=1e-6)
+    assert float(jnp.abs(M_new[:, 2]).max()) == 0.0   # update never arrived
+    assert float(M_old[2, 2]) > 0.0                   # old params survive
+
+
 # ---------------------------------------------------------------------------
 # dense mixing_matrix == psum_mix on a 1-device mesh
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", ["fedavg", "fedp2p", "gossip"])
+@pytest.mark.parametrize("name", ["fedavg", "fedp2p", "gossip",
+                                  "gossip_async"])
 @pytest.mark.parametrize("survive", [1.0, 0.0])
 @pytest.mark.parametrize("sync", [True, False])
 def test_psum_mix_matches_dense_single_device(name, survive, sync):
     """The shard_map lowering and the dense oracle agree on the in-process
     mesh (D=1; the multi-device case runs in test_sharding_and_dryrun's
-    subprocess)."""
+    subprocess with random non-uniform counts)."""
     from repro.configs import get_config
     from repro.sharding.rules import make_mesh_info
     proto = protocols.get(name)
@@ -168,11 +360,14 @@ def test_psum_mix_matches_dense_single_device(name, survive, sync):
     f_new = {"a": jnp.asarray(rng.normal(size=(1, 3, 2)).astype(np.float32)),
              "b": jnp.asarray(rng.normal(size=(1, 4)).astype(np.float32))}
     f_old = jax.tree.map(lambda x: x + 1.0, f_new)
-    s = jnp.asarray([survive], jnp.float32)
-    out_h = proto.psum_mix(f_new, f_old, s, sync, mesh_info=info,
-                           cluster_ids=cids)
-    M_new, M_old = proto.mixing_matrix(s, jnp.ones(1), jnp.asarray(cids),
-                                       sync, num_clusters=int(cids.max()) + 1)
+    counts = jnp.asarray(rng.uniform(1, 5, 1).astype(np.float32))
+    ctx = make_context(key=jax.random.PRNGKey(7),
+                       survive=jnp.asarray([survive], jnp.float32),
+                       counts=counts, cluster_ids=cids,
+                       num_clusters=int(cids.max()) + 1,
+                       do_global_sync=sync, mesh_info=info)
+    out_h = proto.psum_mix(f_new, f_old, ctx)
+    M_new, M_old = proto.mixing_matrix(ctx)
     out_d = proto.apply_mixing(M_new, M_old, f_new, f_old)
     for a, b in zip(jax.tree.leaves(out_h), jax.tree.leaves(out_d)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
@@ -210,6 +405,17 @@ def test_topology_partition_shapes_and_balance():
     sel, ids = np.asarray(sel), np.asarray(ids)
     assert len(np.unique(sel)) == 12                 # distinct clients
     assert np.all(np.bincount(ids, minlength=4) == 3)   # exactly Q per cluster
+
+
+def test_topology_comm_time_reads_ctx():
+    from repro.core.comm_model import CommParams
+    topo = make_topology(100, grid=8, seed=0)
+    p = CommParams(100e6, server_bw=1e9, device_bw=25e6, alpha=1.0)
+    proto = protocols.get("fedp2p_topo")
+    with_topo = proto.comm_time(p, 100, L=10,
+                                ctx=make_context(topology=topo))
+    without = proto.comm_time(p, 100, L=10)
+    assert with_topo != without       # ctx.topology switches the cost model
 
 
 # ---------------------------------------------------------------------------

@@ -132,7 +132,9 @@ def test_moe_ep_matches_gather_path():
 
 def test_hierarchical_fedp2p_mix_matches_matrix():
     """Grouped-psum hierarchical sync (production path) == dense mixing
-    matrix (reference) across straggler/sync cases (§Perf pair 3)."""
+    matrix (reference) across straggler/sync cases, with random NON-UNIFORM
+    per-client counts (|D_i|-weighted psums) and the key-driven random
+    matching of gossip_async (§Perf pair 3 + ISSUE 2 acceptance)."""
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -155,21 +157,27 @@ def test_hierarchical_fedp2p_mix_matches_matrix():
                    "labels": jax.random.randint(key, (D, steps, B, S), 0,
                                                 cfg.vocab_size)}
         fp = broadcast_to_clients(params, D)
-        for algo in ("fedp2p", "gossip", "fedavg"):
-            r_ref = make_federated_round(model, fl, D, steps, algorithm=algo)
+        rng = np.random.default_rng(7)
+        counts = jnp.asarray(rng.uniform(1, 9, D).astype(np.float32))
+        for algo in ("fedp2p", "gossip", "fedavg", "gossip_async"):
+            r_ref = make_federated_round(model, fl, D, steps, algorithm=algo,
+                                         counts=counts)
             r_hier = make_federated_round(model, fl, D, steps, algorithm=algo,
-                                          mesh_info=info)
-            for survive in (jnp.ones((D,)),
-                            jnp.array([0., 1, 1, 1, 0, 0, 1, 1])):
-                for sync in (True, False):
-                    o_ref, _ = r_ref(fp, batches, survive, do_global_sync=sync)
-                    o_h, _ = r_hier(fp, batches, survive, do_global_sync=sync)
-                    for a, b in zip(jax.tree.leaves(o_ref),
-                                    jax.tree.leaves(o_h)):
-                        np.testing.assert_allclose(
-                            np.asarray(a, np.float32),
-                            np.asarray(b, np.float32),
-                            rtol=2e-3, atol=2e-4, err_msg=algo)
+                                          counts=counts, mesh_info=info)
+            for k in (jax.random.PRNGKey(42), jax.random.PRNGKey(43)):
+                for survive in (jnp.ones((D,)),
+                                jnp.array([0., 1, 1, 1, 0, 0, 1, 1])):
+                    for sync in (True, False):
+                        o_ref, _ = r_ref(fp, batches, survive, k,
+                                         do_global_sync=sync)
+                        o_h, _ = r_hier(fp, batches, survive, k,
+                                        do_global_sync=sync)
+                        for a, b in zip(jax.tree.leaves(o_ref),
+                                        jax.tree.leaves(o_h)):
+                            np.testing.assert_allclose(
+                                np.asarray(a, np.float32),
+                                np.asarray(b, np.float32),
+                                rtol=2e-3, atol=2e-4, err_msg=algo)
         print("OK")
     """)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,

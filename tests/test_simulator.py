@@ -73,20 +73,21 @@ def test_distributed_round_sync_semantics():
                "labels": jax.random.randint(key, (D, steps, B, S), 0,
                                             cfg.vocab_size)}
     ones = jnp.ones((D,))
+    kr = jax.random.PRNGKey(2)
 
-    fp1, _ = round_fn(fp, batches, ones, do_global_sync=False)
+    fp1, _ = round_fn(fp, batches, ones, kr, do_global_sync=False)
     leaf = jax.tree.leaves(fp1)[1]
     assert jnp.allclose(leaf[0], leaf[1])          # same cluster
     assert not jnp.allclose(leaf[0], leaf[2])      # different cluster
 
-    fp2, _ = round_fn(fp, batches, ones, do_global_sync=True)
+    fp2, _ = round_fn(fp, batches, ones, kr, do_global_sync=True)
     leaf2 = jax.tree.leaves(fp2)[1]
     for i in range(1, D):
         assert jnp.allclose(leaf2[0], leaf2[i])
 
     # fedavg baseline equalizes every round
     avg_fn = make_federated_round(model, fl, D, steps, algorithm="fedavg")
-    fp3, _ = avg_fn(fp, batches, ones)
+    fp3, _ = avg_fn(fp, batches, ones, kr)
     leaf3 = jax.tree.leaves(fp3)[1]
     assert jnp.allclose(leaf3[0], leaf3[3])
 
