@@ -66,13 +66,21 @@ def run(quick: bool = True, rounds: int = 0, verbose: bool = False):
                 continue
             rows.append((f"table1/{name}/{a}_best_acc", hists[a].best_acc,
                          f"fedp2p={h_p2p.best_acc:.4f}"))
-        # Fig 2 smoothness: std of round-to-round accuracy deltas
-        d_p2p = float(np.std(np.diff(h_p2p.acc))) if len(h_p2p.acc) > 2 else 0.0
-        d_avg = float(np.std(np.diff(h_avg.acc))) if len(h_avg.acc) > 2 else 0.0
+        # Fig 2 smoothness: std of PER-ROUND accuracy deltas. The acc
+        # entries carry explicit round indices (History.acc_rounds), so a
+        # subsampled eval cadence normalizes each delta by its round gap
+        # instead of silently treating k-round jumps as 1-round jumps.
+        def _smoothness(h):
+            if len(h.acc) <= 2:
+                return 0.0
+            return float(np.std(np.diff(h.acc) / np.diff(h.acc_rounds)))
+
+        d_p2p, d_avg = _smoothness(h_p2p), _smoothness(h_avg)
         rows.append((f"fig2/{name}/smoothness_std_p2p", d_p2p,
                      f"fedavg_std={d_avg:.4f}"))
         curves[name] = {a: hists[a].acc for a in algos}
-        curves[name].update({"loss_p2p": h_p2p.train_loss,
+        curves[name].update({"acc_rounds": h_p2p.acc_rounds,
+                             "loss_p2p": h_p2p.train_loss,
                              "loss_avg": h_avg.train_loss})
     return rows, curves
 

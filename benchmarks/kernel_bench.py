@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from benchmarks.common import timed
 from repro.kernels import ref
 from repro.kernels.fed_aggregate import fed_aggregate
+from repro.kernels.fed_mix import fed_mix
 
 
 def run(quick: bool = True):
@@ -25,6 +26,21 @@ def run(quick: bool = True):
     ok = bool(jnp.allclose(out_k, ref.fed_aggregate_ref(x[:, :4096], w),
                            rtol=1e-4))
     rows.append(("kernel/fed_aggregate_pallas_interpret_match", float(ok),
+                 "1.0 = matches oracle"))
+
+    # fed_mix: one round of fused dense mixing, O = Mn @ Xn + Mo @ Xo
+    ks = jax.random.split(key, 3)
+    mn = jax.random.uniform(ks[0], (n, n)) / n
+    mo = jax.random.uniform(ks[1], (n, n)) / n
+    x_old = jax.random.normal(ks[2], (n, d), jnp.float32)
+    f_mix = jax.jit(ref.fed_mix_ref)
+    rows.append((f"kernel/fed_mix_ref/{n}x{d}",
+                 timed(f_mix, mn, mo, x, x_old), "jnp oracle (XLA:CPU)"))
+    out_m = fed_mix(mn, mo, x[:, :4096], x_old[:, :4096], interpret=True)
+    ok = bool(jnp.allclose(out_m,
+                           ref.fed_mix_ref(mn, mo, x[:, :4096],
+                                           x_old[:, :4096]), rtol=1e-4))
+    rows.append(("kernel/fed_mix_pallas_interpret_match", float(ok),
                  "1.0 = matches oracle"))
 
     b, h, s, hd = 1, 4, (1024 if quick else 4096), 64

@@ -24,6 +24,10 @@ def _key_str(path) -> str:
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
                     metadata: Optional[Dict] = None, keep: int = 3) -> str:
+    if keep < 1:
+        # _retain(keep<=0) deletes everything — including the checkpoint
+        # this very call just wrote; refuse rather than self-destruct
+        raise ValueError(f"save_checkpoint requires keep >= 1, got {keep}")
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays, dtypes = {}, []
@@ -48,7 +52,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
 def _retain(ckpt_dir: str, keep: int) -> None:
     ckpts = sorted(f for f in os.listdir(ckpt_dir)
                    if f.startswith("step_") and f.endswith(".npz"))
-    for old in ckpts[:-keep]:
+    # keep <= 0 means retain nothing (ckpts[:-0] would be [] and keep all).
+    # Deliberately stricter than save_checkpoint, which rejects keep < 1:
+    # a purge is meaningful for a standalone cleanup call, but never as the
+    # retention policy of the write that just happened.
+    drop = ckpts if keep <= 0 else ckpts[:-keep]
+    for old in drop:
         os.remove(os.path.join(ckpt_dir, old))
 
 
@@ -79,6 +88,9 @@ def load_checkpoint(ckpt_dir: str, tree_like: Any,
                 a = a.view(ml_dtypes.bfloat16)
             leaves.append(a)
     ref_leaves, treedef = jax.tree_util.tree_flatten(tree_like)
-    assert len(ref_leaves) == len(leaves), "checkpoint/model structure mismatch"
+    if len(ref_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint/model structure mismatch: {path} holds "
+            f"{len(leaves)} leaves, tree_like expects {len(ref_leaves)}")
     out = treedef.unflatten([np.asarray(l) for l in leaves])
     return out, meta

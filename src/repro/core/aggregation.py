@@ -21,14 +21,21 @@ import jax.numpy as jnp
 
 
 def _normalize(weights: jnp.ndarray, mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Normalized aggregation coefficients, with degenerate-round guards:
+    zero-weight survivors fall back to uniform over the mask; an all-zero
+    mask (every client straggled) falls back to uniform over all clients."""
     w = weights.astype(jnp.float32)
-    if mask is not None:
-        w = w * mask.astype(jnp.float32)
+    uniform_all = jnp.ones_like(w) / w.shape[0]
+    if mask is None:
+        total = jnp.sum(w)
+        return jnp.where(total > 0, w / jnp.maximum(total, 1e-12), uniform_all)
+    m = mask.astype(jnp.float32)
+    w = w * m
     total = jnp.sum(w)
-    # all-dropped guard: fall back to uniform over mask (or all clients)
-    safe = jnp.where(total > 0, w / jnp.maximum(total, 1e-12),
-                     jnp.ones_like(w) / w.shape[0])
-    return safe
+    m_total = jnp.sum(m)
+    fallback = jnp.where(m_total > 0, m / jnp.maximum(m_total, 1e-12),
+                         uniform_all)
+    return jnp.where(total > 0, w / jnp.maximum(total, 1e-12), fallback)
 
 
 def weighted_average(stacked_params, weights: jnp.ndarray,

@@ -38,9 +38,15 @@ from repro.protocols.engine import (  # noqa: F401 — re-exported stable API
 
 @dataclass
 class History:
+    """Per-run training record. ``train_loss`` always carries EVERY round
+    (the scan buffer computes it regardless of the eval cadence), while the
+    accuracy entries are subsampled by ``eval_every``; ``acc_rounds`` holds
+    the 1-based round number of each ``acc``/``acc_client_mean`` entry so
+    subsampled curves keep their round alignment."""
     acc: List[float] = field(default_factory=list)
     acc_client_mean: List[float] = field(default_factory=list)
     train_loss: List[float] = field(default_factory=list)
+    acc_rounds: List[int] = field(default_factory=list)
 
     @property
     def best_acc(self) -> float:
@@ -49,9 +55,13 @@ class History:
 
 class Simulator:
     def __init__(self, net: PaperNetConfig, data: FederatedDataset,
-                 fl: FLConfig, topology: Optional[Topology] = None):
+                 fl: FLConfig, topology: Optional[Topology] = None, *,
+                 mix_use_pallas: Optional[bool] = None):
         self.net, self.fl = net, fl
         self.topology = topology
+        #: forwarded to every DenseEngine (None = auto backend; False forces
+        #: the jnp mixing oracle, e.g. to A/B against the kernel on TPU)
+        self.mix_use_pallas = mix_use_pallas
         self.data_dev = {
             "x": jnp.asarray(data.x), "y": jnp.asarray(data.y),
             "mask": jnp.asarray(data.mask),
@@ -74,7 +84,8 @@ class Simulator:
                 self.topology = make_topology(self.fl.num_clients,
                                               seed=self.fl.seed)
             self._engines[proto.name] = DenseEngine(
-                self.net, self.data_dev, self.fl, proto, self.topology)
+                self.net, self.data_dev, self.fl, proto, self.topology,
+                mix_use_pallas=self.mix_use_pallas)
         return self._engines[proto.name]
 
     @property
@@ -96,10 +107,11 @@ class Simulator:
         loss = np.asarray(metrics["train_loss"])
         hist = History()
         for t in range(rounds):
+            hist.train_loss.append(float(loss[t]))
             if (t + 1) % eval_every == 0 or t == rounds - 1:
                 hist.acc.append(float(acc[t]))
                 hist.acc_client_mean.append(float(acc_m[t]))
-                hist.train_loss.append(float(loss[t]))
+                hist.acc_rounds.append(t + 1)
                 if verbose:
                     print(f"  [{algorithm}] round {t+1:4d} "
                           f"acc={float(acc[t]):.4f} loss={float(loss[t]):.4f}")

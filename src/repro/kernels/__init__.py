@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Current kernels: fed_aggregate (weighted client reduction),
+# fed_mix (fused dense mixing O = M_new@X_new + M_old@X_old, behind
+# Protocol.apply_mixing), flash_attention, ssd_scan. Dispatch +
+# flat-param packing live in ops.py; jnp oracles in ref.py.

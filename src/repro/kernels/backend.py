@@ -1,0 +1,21 @@
+"""Backend detection shared by the Pallas kernel modules and their wrappers.
+
+Kept dependency-free (no intra-package imports) so both the low-level kernel
+modules (``fed_aggregate``, ``fed_mix``, ...) and the dispatching wrappers in
+``ops`` can use it without cycles.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """Resolve an ``interpret=None`` kernel default against the backend:
+    Mosaic-native on TPU, the Pallas interpreter everywhere else. A kernel
+    called directly (not through ``ops``) must never silently run interpreted
+    on real hardware."""
+    return (not on_tpu()) if interpret is None else bool(interpret)

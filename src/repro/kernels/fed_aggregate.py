@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import default_interpret
+
 DEFAULT_BLOCK_D = 2048
 
 
@@ -33,11 +35,14 @@ def _fed_aggregate_kernel(w_ref, x_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def fed_aggregate(x: jnp.ndarray, w: jnp.ndarray, *,
                   block_d: int = DEFAULT_BLOCK_D,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool | None = None) -> jnp.ndarray:
     """x: [N, D] stacked flat params; w: [N] aggregation weights -> [D].
 
-    D is padded to a multiple of ``block_d`` internally.
+    D is padded to a multiple of ``block_d`` internally. ``interpret=None``
+    auto-detects the backend (native Mosaic on TPU, interpreter elsewhere) —
+    a direct call on TPU must never silently run interpreted.
     """
+    interpret = default_interpret(interpret)
     n, d = x.shape
     pad = (-d) % block_d
     if pad:

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -67,11 +69,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                    static_argnames=("window", "bq", "bk", "interpret"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     window: int = 0, bq: int = 512, bk: int = 512,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """q: [B, Hq, Sq, hd]; k, v: [B, Hkv, Tk, hd] -> [B, Hq, Sq, hd].
 
     Causal; optional sliding window. Hq must be a multiple of Hkv.
+    ``interpret=None`` auto-detects the backend.
     """
+    interpret = default_interpret(interpret)
     b, hq, sq, hd = q.shape
     _, hkv, tk, _ = k.shape
     g = hq // hkv

@@ -4,41 +4,110 @@ On TPU the Mosaic kernels run natively (``interpret=False``); on CPU (this
 container, and the multi-pod dry-run which lowers the XLA path) the wrappers
 either run the kernels in interpret mode (tests) or fall back to the jnp
 reference (production code paths choose explicitly).
+
+The flat-param packing layer (``pack_tree`` / ``unpack_tree``) is shared by
+every tree-shaped kernel entry point: a [N, ...] stacked pytree is flattened
+ONCE into a single [N, sum(sizes)] buffer, the flat kernel runs over it, and
+the result is unflattened. This is also the seam where quantized-exchange
+protocols will sit — quantize after pack, dequantize before unpack — so the
+kernels never need to learn about pytrees or codecs.
 """
 from __future__ import annotations
+
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.backend import on_tpu  # noqa: F401 — re-exported
 from repro.kernels.fed_aggregate import fed_aggregate as _fed_aggregate_pallas
+from repro.kernels.fed_mix import fed_mix as _fed_mix_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+# ---------------------------------------------------------------------------
+# flat-param packing
+# ---------------------------------------------------------------------------
 
+class TreeSpec(NamedTuple):
+    """Recipe to undo ``pack_tree``: per-leaf trailing shapes/dtypes/sizes."""
+    treedef: object
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[object, ...]
+    sizes: Tuple[int, ...]
+
+
+def pack_tree(tree) -> Tuple[jnp.ndarray, TreeSpec]:
+    """Flatten a stacked pytree (leaves [N, ...]) into one [N, sum(sizes)]
+    buffer + the spec to unpack it. Leaf dtypes are preserved per-leaf in the
+    spec; the buffer takes the promoted common dtype."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    n = leaves[0].shape[0]
+    spec = TreeSpec(treedef,
+                    tuple(l.shape[1:] for l in leaves),
+                    tuple(l.dtype for l in leaves),
+                    tuple(int(l[0].size) for l in leaves))
+    return jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1), spec
+
+
+def unpack_tree(flat: jnp.ndarray, spec: TreeSpec):
+    """Undo ``pack_tree`` over the last axis: flat [..., sum(sizes)] -> pytree
+    with leaves [..., *leaf_shape] cast back to their original dtypes. Works
+    for both reduced ([sum],  ``fed_aggregate``) and client-preserving
+    ([N, sum], ``fed_mix``) outputs."""
+    lead = flat.shape[:-1]
+    outs, off = [], 0
+    for shape, dtype, sz in zip(spec.shapes, spec.dtypes, spec.sizes):
+        outs.append(flat[..., off:off + sz].reshape(lead + shape).astype(dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(spec.treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch
+# ---------------------------------------------------------------------------
 
 def fed_aggregate(x, w, *, use_pallas: bool | None = None, interpret: bool | None = None):
     use = on_tpu() if use_pallas is None else use_pallas
     if not use:
         return ref.fed_aggregate_ref(x, w)
-    return _fed_aggregate_pallas(x, w, interpret=not on_tpu() if interpret is None else interpret)
+    return _fed_aggregate_pallas(x, w, interpret=interpret)
 
 
 def fed_aggregate_tree(stacked_params, w, *, use_pallas: bool | None = None):
     """Aggregate a stacked pytree (leaves [N, ...]) via the flat kernel."""
-    leaves, treedef = jax.tree_util.tree_flatten(stacked_params)
-    n = leaves[0].shape[0]
-    sizes = [int(l[0].size) for l in leaves]
-    flat = jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
-    out = fed_aggregate(flat, w, use_pallas=use_pallas)
-    outs, off = [], 0
-    for l, sz in zip(leaves, sizes):
-        outs.append(out[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
-        off += sz
-    return jax.tree_util.tree_unflatten(treedef, outs)
+    flat, spec = pack_tree(stacked_params)
+    return unpack_tree(fed_aggregate(flat, w, use_pallas=use_pallas), spec)
+
+
+def fed_mix(m_new, m_old, x_new, x_old, *, use_pallas: bool | None = None,
+            interpret: bool | None = None):
+    """Fused dense mixing O = M_new @ X_new + M_old @ X_old on [D, P] flat
+    params; the single-primitive form of ``Protocol.apply_mixing``."""
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.fed_mix_ref(m_new, m_old, x_new, x_old)
+    return _fed_mix_pallas(m_new, m_old, x_new, x_old, interpret=interpret)
+
+
+def fed_mix_tree(m_new, m_old, f_new, f_old, *, use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+    """Apply the dense mixing matrices over [D, ...] pytrees through ONE
+    fused flat pass: pack both trees once, run ``fed_mix``, unpack."""
+    flat_new, spec = pack_tree(f_new)
+    flat_old, spec_old = pack_tree(f_old)
+    if spec_old.treedef != spec.treedef or spec_old.shapes != spec.shapes:
+        # two mismatched trees can still flatten to the same [D, P] buffer
+        # and would mix misaligned columns silently
+        raise ValueError(
+            f"fed_mix_tree: f_new/f_old tree structures differ "
+            f"(new={spec.treedef} shapes={spec.shapes}, "
+            f"old={spec_old.treedef} shapes={spec_old.shapes})")
+    out = fed_mix(m_new, m_old, flat_new, flat_old,
+                  use_pallas=use_pallas, interpret=interpret)
+    return unpack_tree(out, spec)
 
 
 def flash_attention(q, k, v, *, window: int = 0,
@@ -47,8 +116,7 @@ def flash_attention(q, k, v, *, window: int = 0,
     use = on_tpu() if use_pallas is None else use_pallas
     if not use:
         return ref.flash_attention_ref(q, k, v, window=window)
-    return _flash_pallas(q, k, v, window=window,
-                         interpret=not on_tpu() if interpret is None else interpret)
+    return _flash_pallas(q, k, v, window=window, interpret=interpret)
 
 
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 256,
@@ -57,5 +125,4 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 256,
     use = on_tpu() if use_pallas is None else use_pallas
     if not use:
         return ref.ssd_scan_ref(x, dt, A, B, C)
-    return _ssd_pallas(x, dt, A, B, C, chunk=chunk,
-                       interpret=not on_tpu() if interpret is None else interpret)
+    return _ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -16,6 +16,18 @@ def fed_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return out.astype(x.dtype)
 
 
+def fed_mix_ref(m_new: jnp.ndarray, m_old: jnp.ndarray,
+                x_new: jnp.ndarray, x_old: jnp.ndarray) -> jnp.ndarray:
+    """m_new, m_old: [D, D]; x_new, x_old: [D, P] -> [D, P].
+
+    The dense mixing operator f_out = M_new @ f_new + M_old @ f_old on
+    flat-packed client params (f32 accumulate, cast back to x_new.dtype).
+    """
+    out = m_new.astype(jnp.float32) @ x_new.astype(jnp.float32)
+    out = out + m_old.astype(jnp.float32) @ x_old.astype(jnp.float32)
+    return out.astype(x_new.dtype)
+
+
 def flash_attention_ref(q, k, v, *, window: int = 0) -> jnp.ndarray:
     """q: [B,Hq,Sq,hd]; k, v: [B,Hkv,Tk,hd] -> [B,Hq,Sq,hd]. Dense softmax."""
     b, hq, sq, hd = q.shape

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import default_interpret
+
 
 def _ssd_kernel(xdt_ref, adt_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *,
                 nc: int, q: int):
@@ -68,10 +70,12 @@ def _ssd_kernel(xdt_ref, adt_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 256,
-             interpret: bool = True):
+             interpret: bool | None = None):
     """Same contract as models.ssm.ssd_chunked (zero initial state):
     x [b,S,h,p], dt [b,S,h] (post-softplus), A [h] (<0), B/C [b,S,n]
-    -> (y [b,S,h,p], final_state [b,h,p,n])."""
+    -> (y [b,S,h,p], final_state [b,h,p,n]).
+    ``interpret=None`` auto-detects the backend."""
+    interpret = default_interpret(interpret)
     b, S, h, p = x.shape
     n = B.shape[-1]
     assert S % chunk == 0

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.config import FLConfig
 from repro.core.comm_model import CommParams
+from repro.kernels import ops as kernel_ops
 from repro.core.partition import sample_participants
 from repro.core.topology import Topology
 from repro.protocols.context import RoundContext, make_context  # noqa: F401
@@ -140,16 +141,18 @@ class Protocol:
     # shared helpers
     # ------------------------------------------------------------------
     @staticmethod
-    def apply_mixing(M_new: jnp.ndarray, M_old: jnp.ndarray, f_new, f_old):
-        """Apply the dense mixing matrices leaf-wise over [D, ...] pytrees."""
-        D = M_new.shape[0]
-
-        def leaf(new, old):
-            out = M_new @ new.reshape(D, -1).astype(jnp.float32)
-            out = out + M_old @ old.reshape(D, -1).astype(jnp.float32)
-            return out.reshape(new.shape).astype(new.dtype)
-
-        return jax.tree.map(leaf, f_new, f_old)
+    def apply_mixing(M_new: jnp.ndarray, M_old: jnp.ndarray, f_new, f_old, *,
+                     use_pallas: Optional[bool] = None,
+                     interpret: Optional[bool] = None):
+        """Apply the dense mixing matrices over [D, ...] pytrees as ONE fused
+        flat pass: both trees are packed once into [D, sum(sizes)] buffers and
+        ``kernels.ops.fed_mix`` computes M_new @ X_new + M_old @ X_old in a
+        single kernel (Pallas on TPU, interpret under ``use_pallas=True`` on
+        CPU, jnp oracle otherwise) with f32 accumulation, then the result is
+        unpacked back to the leaf shapes/dtypes."""
+        return kernel_ops.fed_mix_tree(M_new, M_old, f_new, f_old,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret)
 
     @staticmethod
     def _shard_mix(local_fn, f_new, f_old, ctx: RoundContext, *extras):

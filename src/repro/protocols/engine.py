@@ -109,10 +109,15 @@ class DenseEngine:
     """
 
     def __init__(self, net: PaperNetConfig, data_dev: Dict, fl: FLConfig,
-                 proto: Protocol, topology: Optional[Topology] = None):
+                 proto: Protocol, topology: Optional[Topology] = None, *,
+                 mix_use_pallas: Optional[bool] = None):
         self.net, self.fl, self.proto = net, fl, proto
         self.topology = topology
         self.data_dev = data_dev
+        #: backend for the fused mixing primitive behind ``apply_mixing``:
+        #: None = auto (Pallas on TPU, jnp oracle on CPU); True forces the
+        #: kernel (interpret mode off-TPU); False forces the jnp oracle
+        self.mix_use_pallas = mix_use_pallas
         local_train = make_local_trainer(net, fl)
         self._vtrain = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))
         self._vtrain_per = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0))
@@ -167,11 +172,13 @@ class DenseEngine:
                 client_params, losses = self._vtrain(params, cx, cy, cm, keys)
             else:
                 M_new, M_old = proto.mixing_matrix(ctx_for(r, False))
-                start = proto.apply_mixing(M_new, M_old, client_params, old)
+                start = proto.apply_mixing(M_new, M_old, client_params, old,
+                                           use_pallas=self.mix_use_pallas)
                 client_params, losses = self._vtrain_per(start, cx, cy, cm, keys)
 
         M_new, M_old = proto.mixing_matrix(ctx_for(sub_rounds, True))
-        mixed = proto.apply_mixing(M_new, M_old, client_params, old)
+        mixed = proto.apply_mixing(M_new, M_old, client_params, old,
+                                   use_pallas=self.mix_use_pallas)
         new_params = jax.tree.map(lambda x: jnp.mean(x, axis=0), mixed)
         return new_params, jnp.mean(losses)
 
@@ -235,12 +242,16 @@ class MeshEngine:
 
     def __init__(self, model, fl: FLConfig, num_clients_dev: int,
                  local_steps: int, *, algorithm: str = "", counts=None,
-                 remat: bool = True, out_shardings=None, mesh_info=None):
+                 remat: bool = True, out_shardings=None, mesh_info=None,
+                 mix_use_pallas: Optional[bool] = None):
         self.proto = get(algorithm or fl.algorithm)
         self.fl = fl
         self.num_clients_dev = num_clients_dev
         self.local_steps = local_steps
         self.mesh_info = mesh_info
+        #: backend for the no-mesh dense fallback's fused mixing (see
+        #: DenseEngine.mix_use_pallas); ignored when mesh_info is set
+        self.mix_use_pallas = mix_use_pallas
         ids = self.proto.mesh_cluster_ids(num_clients_dev, fl)
         self._cluster_ids = ids                      # concrete — mesh groups
         self._num_clusters = int(ids.max()) + 1
@@ -285,7 +296,8 @@ class MeshEngine:
             f_out = self.proto.psum_mix(f_new, f_params, ctx)
         else:
             M_new, M_old = self.proto.mixing_matrix(ctx)
-            f_out = self.proto.apply_mixing(M_new, M_old, f_new, f_params)
+            f_out = self.proto.apply_mixing(M_new, M_old, f_new, f_params,
+                                            use_pallas=self.mix_use_pallas)
         return f_out, jnp.mean(losses)
 
     # -- the scan-compiled training loop -------------------------------

@@ -1,0 +1,58 @@
+"""checkpoint/io: save/load round-trip, structure-mismatch errors (a real
+exception, not a strippable assert), and step retention edge cases."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (
+    _retain, latest_step, load_checkpoint, save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(3,)).astype(np.float32)
+                             ).astype(jnp.bfloat16)}
+
+
+def test_save_load_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 7, tree, metadata={"lr": 0.1})
+    out, meta = load_checkpoint(str(tmp_path), tree)
+    assert meta["step"] == 7 and meta["metadata"] == {"lr": 0.1}
+    for key in tree:
+        np.testing.assert_array_equal(np.asarray(out[key], np.float32),
+                                      np.asarray(tree[key], np.float32))
+
+
+def test_load_structure_mismatch_raises_value_error(tmp_path):
+    """A bare assert would vanish under ``python -O``; must be ValueError."""
+    save_checkpoint(str(tmp_path), 1, _tree())
+    with pytest.raises(ValueError, match="structure mismatch"):
+        load_checkpoint(str(tmp_path), {"only_one_leaf": jnp.zeros((2,))})
+
+
+def test_retention_keeps_newest(tmp_path):
+    for step in (1, 2, 3, 4):
+        save_checkpoint(str(tmp_path), step, _tree(), keep=2)
+    assert latest_step(str(tmp_path)) == 4
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path), _tree(), step=1)
+    load_checkpoint(str(tmp_path), _tree(), step=3)
+
+
+@pytest.mark.parametrize("keep", [0, -1])
+def test_retention_keep_nonpositive_keeps_nothing(tmp_path, keep):
+    """keep=0 must retain NOTHING (ckpts[:-0] is [] and used to keep all)."""
+    save_checkpoint(str(tmp_path), 1, _tree())
+    save_checkpoint(str(tmp_path), 2, _tree())
+    _retain(str(tmp_path), keep)
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_save_checkpoint_rejects_nonpositive_keep(tmp_path):
+    """save_checkpoint(keep=0) would delete its own freshly-written file."""
+    with pytest.raises(ValueError, match="keep >= 1"):
+        save_checkpoint(str(tmp_path), 1, _tree(), keep=0)
+    assert latest_step(str(tmp_path)) is None

@@ -89,11 +89,26 @@ def test_simulator_eval_every_subsamples(small_sim):
     np.testing.assert_allclose(sub.acc, [full.acc[1], full.acc[3]],
                                rtol=1e-6, atol=1e-7)
     assert len(full.acc) == T
+    assert full.acc_rounds == [1, 2, 3, 4]
+    # acc entries carry their round numbers; losses are NOT subsampled —
+    # they are computed every round in the scan buffer regardless
+    assert sub.acc_rounds == [2, 4]
+    assert len(sub.train_loss) == T
+    np.testing.assert_allclose(sub.train_loss, full.train_loss,
+                               rtol=1e-6, atol=1e-7)
     # unread slots of the sparse buffer really are skipped (zeros)
     eng = small_sim.engine("fedavg")
     _, m = eng.run_rounds(small_sim.init_params(0), jax.random.PRNGKey(1),
                           T, eval_every=2)
     assert float(m["acc"][0]) == 0.0 and float(m["acc"][1]) > 0.0
+
+
+def test_simulator_eval_every_odd_tail_round(small_sim):
+    """rounds not divisible by eval_every: the final round is always
+    evaluated and carries its true round index."""
+    sub = small_sim.run(rounds=5, algorithm="fedavg", seed=0, eval_every=3)
+    assert sub.acc_rounds == [3, 5]
+    assert len(sub.acc) == 2 and len(sub.train_loss) == 5
 
 
 def test_make_context_traced_cluster_ids_requires_num_clusters():

@@ -1,0 +1,296 @@
+"""Correctness pins for the fused Pallas mixing kernel (`kernels/fed_mix`)
+and the shared flat-param packing layer (`kernels/ops.pack_tree`):
+
+* fed_mix (interpret mode) == jnp oracle across dtypes, D not a multiple of
+  the row block, tile-padding edges, and N=1 — parametrized + hypothesis;
+* fed_mix matches ``Protocol.apply_mixing``'s dense jnp form on every
+  registered protocol's (M_new, M_old) (the acceptance criterion);
+* the refactored ``fed_aggregate_tree`` still matches its oracle through
+  the pack/unpack layer, including mixed-dtype trees;
+* ``DenseEngine.run_rounds`` with the fused path enabled stays
+  round-for-round equal to the oracle path on the test nets.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import protocols
+from repro.config import FLConfig
+from repro.kernels import ops, ref
+from repro.kernels.fed_mix import fed_mix
+from repro.protocols import make_context
+
+
+def _random_mix(rng, D):
+    """Random convex (M_new, M_old): rows of the sum are a distribution."""
+    mn = rng.uniform(0, 1, (D, D)).astype(np.float32)
+    mo = rng.uniform(0, 1, (D, D)).astype(np.float32)
+    tot = (mn + mo).sum(axis=1, keepdims=True)
+    return jnp.asarray(mn / tot), jnp.asarray(mo / tot)
+
+
+# ---------------------------------------------------------------------------
+# fed_mix vs jnp oracle — shape/dtype sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,p,block_r,block_d,block_k", [
+    (6, 700, 128, 256, 256),  # D below one row block (simulator scale)
+    (16, 4096, 8, 1024, 256), # D spans multiple row blocks
+    (17, 513, 8, 128, 256),   # neither dim tile-aligned
+    (1, 129, 128, 128, 256),  # N=1 client
+    (24, 2048, 16, 2048, 256),  # P exactly one tile
+    (40, 300, 16, 128, 16),   # contraction spans multiple K blocks
+    (33, 257, 8, 128, 8),     # K blocks with padded final chunk
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fed_mix_matches_oracle(d, p, block_r, block_d, block_k, dtype):
+    rng = np.random.default_rng(d * p)
+    mn, mo = _random_mix(rng, d)
+    xn = jnp.asarray(rng.normal(size=(d, p)).astype(np.float32)).astype(dtype)
+    xo = jnp.asarray(rng.normal(size=(d, p)).astype(np.float32)).astype(dtype)
+    out = fed_mix(mn, mo, xn, xo, block_r=block_r, block_d=block_d,
+                  block_k=block_k, interpret=True)
+    expect = ref.fed_mix_ref(mn, mo, xn, xo)
+    assert out.dtype == xn.dtype
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fed_mix_ops_dispatch_cpu_oracle_and_forced_kernel():
+    """ops.fed_mix: CPU default -> jnp oracle; use_pallas=True -> interpret
+    kernel; both agree."""
+    rng = np.random.default_rng(0)
+    mn, mo = _random_mix(rng, 5)
+    xn = jnp.asarray(rng.normal(size=(5, 300)).astype(np.float32))
+    xo = jnp.asarray(rng.normal(size=(5, 300)).astype(np.float32))
+    out_ref = ops.fed_mix(mn, mo, xn, xo)                    # CPU -> oracle
+    out_pal = ops.fed_mix(mn, mo, xn, xo, use_pallas=True)   # interpret
+    np.testing.assert_allclose(np.asarray(out_ref), np.asarray(out_pal),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: fed_mix == apply_mixing's jnp form on every protocol's matrices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(protocols.names()))
+@pytest.mark.parametrize("sync", [True, False])
+def test_fed_mix_matches_every_protocol_mixing(name, sync):
+    proto = protocols.get(name)
+    rng = np.random.default_rng(7)
+    D = 8
+    cids = proto.mesh_cluster_ids(D, FLConfig(num_clusters=4, participation=D))
+    ctx = make_context(
+        key=jax.random.PRNGKey(3),
+        survive=jnp.asarray((rng.random(D) > 0.3).astype(np.float32)),
+        counts=jnp.asarray(rng.uniform(0.5, 5.0, D).astype(np.float32)),
+        cluster_ids=jnp.asarray(cids), num_clusters=int(cids.max()) + 1,
+        do_global_sync=sync)
+    M_new, M_old = proto.mixing_matrix(ctx)
+    f_new = {"a": jnp.asarray(rng.normal(size=(D, 3, 5)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(D, 7)).astype(np.float32))}
+    f_old = jax.tree.map(lambda x: x + 0.5, f_new)
+    # dense jnp form of apply_mixing, leaf by leaf
+    def dense_leaf(new, old):
+        out = M_new.astype(jnp.float32) @ new.reshape(D, -1)
+        out = out + M_old.astype(jnp.float32) @ old.reshape(D, -1)
+        return out.reshape(new.shape)
+    expect = jax.tree.map(dense_leaf, f_new, f_old)
+    got = proto.apply_mixing(M_new, M_old, f_new, f_old, use_pallas=True,
+                             interpret=True)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack layer + refactored fed_aggregate_tree
+# ---------------------------------------------------------------------------
+
+def _mixed_tree(rng, n):
+    return {"w": jnp.asarray(rng.normal(size=(n, 4, 3)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32)
+                             ).astype(jnp.bfloat16),
+            "s": jnp.asarray(rng.normal(size=(n,)).astype(np.float32))}
+
+
+def test_pack_unpack_roundtrip_mixed_dtypes():
+    rng = np.random.default_rng(1)
+    tree = _mixed_tree(rng, 6)
+    flat, spec = ops.pack_tree(tree)
+    assert flat.shape == (6, 4 * 3 + 5 + 1)
+    back = ops.unpack_tree(flat, spec)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@pytest.mark.parametrize("n", [1, 3, 16])
+def test_fed_aggregate_tree_matches_oracle(n):
+    rng = np.random.default_rng(n)
+    tree = _mixed_tree(rng, n)
+    w = jnp.asarray(rng.uniform(0.1, 2.0, n).astype(np.float32))
+    w = w / w.sum()
+    out = ops.fed_aggregate_tree(tree, w)
+    flat, spec = ops.pack_tree(tree)
+    expect = ops.unpack_tree(ref.fed_aggregate_ref(flat, w), spec)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fed_mix_tree_rejects_mismatched_trees():
+    """Two trees that flatten to the same [D, P] buffer but with different
+    leaf layouts must raise, not mix misaligned columns silently."""
+    rng = np.random.default_rng(3)
+    D = 4
+    mn, mo = _random_mix(rng, D)
+    f_new = {"a": jnp.zeros((D, 3)), "b": jnp.zeros((D, 7))}
+    f_old = {"a": jnp.zeros((D, 7)), "b": jnp.zeros((D, 3))}
+    with pytest.raises(ValueError, match="tree structures differ"):
+        ops.fed_mix_tree(mn, mo, f_new, f_old)
+
+
+def test_fed_mix_tree_matches_unfused_leafwise():
+    """The fused pack->kernel->unpack path == the old per-leaf matmul form."""
+    rng = np.random.default_rng(2)
+    D = 6
+    f_new = _mixed_tree(rng, D)
+    f_old = jax.tree.map(lambda x: (x.astype(jnp.float32) * 2).astype(x.dtype),
+                         f_new)
+    mn, mo = _random_mix(rng, D)
+
+    def leaf(new, old):
+        out = mn @ new.reshape(D, -1).astype(jnp.float32)
+        out = out + mo @ old.reshape(D, -1).astype(jnp.float32)
+        return out.reshape(new.shape).astype(new.dtype)
+
+    expect = jax.tree.map(leaf, f_new, f_old)
+    for use_pallas in (False, True):
+        got = ops.fed_mix_tree(mn, mo, f_new, f_old, use_pallas=use_pallas)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(expect)):
+            assert a.dtype == b.dtype
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=3e-2 if a.dtype == jnp.bfloat16
+                                       else 1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# DenseEngine: fused path round-for-round equal to the oracle path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedp2p"])
+def test_dense_engine_fused_path_matches_oracle_rounds(algo):
+    from repro.configs.paper_models import LOGREG_SYN
+    from repro.core.simulator import Simulator
+    from repro.data.federated import pack_clients
+    from repro.data.synthetic import syncov
+    from repro.protocols.engine import DenseEngine
+
+    xs, ys = syncov(num_clients=16, seed=0)
+    data = pack_clients(xs, ys, 10, seed=0)
+    fl = FLConfig(num_clients=16, num_clusters=2, devices_per_cluster=2,
+                  participation=4, local_epochs=1, batch_size=10, lr=0.05,
+                  straggler_rate=0.25)
+    sim = Simulator(LOGREG_SYN, data, fl)
+    proto = protocols.get(algo)
+    eng_oracle = DenseEngine(LOGREG_SYN, sim.data_dev, fl, proto,
+                             mix_use_pallas=False)
+    eng_fused = DenseEngine(LOGREG_SYN, sim.data_dev, fl, proto,
+                            mix_use_pallas=True)
+    params = sim.init_params(0)
+    key = jax.random.PRNGKey(1)
+    T = 3
+    p_o, m_o = eng_oracle.run_rounds(params, key, T)
+    p_f, m_f = eng_fused.run_rounds(params, key, T)
+    np.testing.assert_allclose(np.asarray(m_f["train_loss"]),
+                               np.asarray(m_o["train_loss"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_f["acc"]),
+                               np.asarray(m_o["acc"]), rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_o)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_simulator_forwards_mix_backend_switch():
+    """The facade plumbs mix_use_pallas to every engine it builds (so the
+    kernel/oracle A/B is reachable without hand-building DenseEngine)."""
+    from repro.configs.paper_models import LOGREG_SYN
+    from repro.core.simulator import Simulator
+    from repro.data.federated import pack_clients
+    from repro.data.synthetic import syncov
+
+    xs, ys = syncov(num_clients=12, seed=0)
+    data = pack_clients(xs, ys, 10, seed=0)
+    fl = FLConfig(num_clients=12, num_clusters=2, devices_per_cluster=2,
+                  participation=4, local_epochs=1, batch_size=5, lr=0.05)
+    sim = Simulator(LOGREG_SYN, data, fl, mix_use_pallas=False)
+    assert sim.engine("fedavg").mix_use_pallas is False
+    assert Simulator(LOGREG_SYN, data, fl).engine("fedavg").mix_use_pallas \
+        is None
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (skip cleanly without dev deps)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    _SETTINGS = settings(
+        deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # degrade, don't die, without dev deps
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @_SETTINGS
+    @given(st.integers(1, 40), st.integers(1, 600),
+           st.sampled_from([8, 16, 128]), st.sampled_from([128, 256]),
+           st.sampled_from([8, 16, 256]), st.booleans(),
+           st.integers(0, 2 ** 31 - 1))
+    def test_fed_mix_property(d, p, block_r, block_d, block_k, bf16, seed):
+        rng = np.random.default_rng(seed)
+        mn, mo = _random_mix(rng, d)
+        dtype = jnp.bfloat16 if bf16 else jnp.float32
+        xn = jnp.asarray(rng.normal(size=(d, p)).astype(np.float32)).astype(dtype)
+        xo = jnp.asarray(rng.normal(size=(d, p)).astype(np.float32)).astype(dtype)
+        out = fed_mix(mn, mo, xn, xo, block_r=block_r, block_d=block_d,
+                      block_k=block_k, interpret=True)
+        expect = ref.fed_mix_ref(mn, mo, xn, xo)
+        tol = 3e-2 if bf16 else 1e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @_SETTINGS
+    @given(st.integers(1, 16), st.integers(1, 40), st.integers(1, 40),
+           st.booleans(), st.integers(0, 2 ** 31 - 1))
+    def test_fed_aggregate_tree_property(n, sa, sb, bf16, seed):
+        rng = np.random.default_rng(seed)
+        dtype = jnp.bfloat16 if bf16 else jnp.float32
+        tree = {"a": jnp.asarray(rng.normal(size=(n, sa)).astype(np.float32)
+                                 ).astype(dtype),
+                "b": jnp.asarray(rng.normal(size=(n, sb, 2)).astype(np.float32))}
+        w = jnp.asarray(rng.uniform(0.1, 2.0, n).astype(np.float32))
+        out = ops.fed_aggregate_tree(tree, w)
+        wf = np.asarray(w, np.float32)
+        for key_ in ("a", "b"):
+            expect = (np.asarray(tree[key_], np.float32)
+                      * wf.reshape((-1,) + (1,) * (tree[key_].ndim - 1))).sum(0)
+            tol = 3e-2 if (bf16 and key_ == "a") else 1e-4
+            np.testing.assert_allclose(np.asarray(out[key_], np.float32),
+                                       expect, rtol=tol, atol=tol)

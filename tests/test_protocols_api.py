@@ -121,6 +121,30 @@ def test_fedp2p_matrix_matches_cluster_then_global(survive):
     np.testing.assert_allclose((Mn + Mo).sum(1), 1.0, atol=1e-5)  # convex rows
 
 
+def test_weighted_average_all_stragglers_falls_back_uniform_all():
+    """The all-dropped round: an all-zero mask falls back to the uniform
+    mean over ALL clients (never NaN, never zeros)."""
+    rng = np.random.default_rng(5)
+    xs = rng.normal(size=(4, 3)).astype(np.float32)
+    out = weighted_average({"w": jnp.asarray(xs)},
+                           jnp.asarray(rng.uniform(1, 5, 4).astype(np.float32)),
+                           mask=jnp.zeros(4))["w"]
+    np.testing.assert_allclose(np.asarray(out), xs.mean(0), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_weighted_average_zero_weight_survivors_uniform_over_mask():
+    """Survivors whose data weights are all zero average uniformly over the
+    MASK (the surviving clients), not over everyone — the case the old
+    fallback got wrong vs its docstring."""
+    xs = np.arange(12, dtype=np.float32).reshape(4, 3)
+    w = jnp.zeros(4)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    out = weighted_average({"w": jnp.asarray(xs)}, w, mask=mask)["w"]
+    np.testing.assert_allclose(np.asarray(out), xs[[0, 2]].mean(0),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_fedavg_matrix_matches_weighted_average():
     rng = np.random.default_rng(1)
     xs = rng.normal(size=(5, 3)).astype(np.float32)
