@@ -1,0 +1,125 @@
+"""Accuracy-vs-bits-per-round frontier: every registered codec against the
+uncompressed baseline, per protocol, on the paper nets.
+
+This is the repo's end-to-end check of the quantized-exchange subsystem:
+the §3.2 cost model says int8 moves 32/8.125 = 3.94X fewer wire bytes per
+round (``CommParams.bits_per_param``) and this sweep shows what those bytes
+*buy* — best accuracy per (protocol, codec) after the same number of
+rounds, plus the explicit claim rows the CI artifact tracks:
+
+  compression/claim/int8_bytes_reduction   >= 3.5   (acceptance bar)
+  compression/claim/int8_worst_acc_drop    <  0.01  (< 1% accuracy drop)
+
+Every run is one scan-compiled ``DenseEngine.run_rounds`` program with the
+codec inlined into the round (quantize after ``pack_tree``, dequantize
+before ``unpack_tree``; topk threads its error-feedback residual through
+the scan carry).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import jax
+
+from repro import compression, protocols
+from repro.config import FLConfig
+from repro.configs.paper_models import LOGREG_MNIST, LOGREG_SYN
+from repro.core.comm_model import CommParams, min_h_fedp2p
+from repro.core.simulator import Simulator
+from repro.data.federated import pack_clients, pseudo_mnist_federated
+from repro.data.synthetic import syncov
+
+SERVER_BW = 1e9              # the Fig 3 paper regime
+GAMMA = 100.0
+ALPHA = 4.0
+
+
+def _datasets(quick: bool) -> Dict:
+    out = {"SynCov": (LOGREG_SYN,
+                      pack_clients(*syncov(60 if quick else 100, seed=0),
+                                   10, seed=0))}
+    if not quick:
+        out["pseudo-MNIST"] = (LOGREG_MNIST,
+                               pseudo_mnist_federated(1000, seed=0))
+    return out
+
+
+def run(quick: bool = True, rounds: int = 0):
+    rows = []
+    frontier: Dict[str, Dict] = {}
+    codecs = list(compression.names())
+    algos = ["fedavg", "fedp2p"] if quick else ["fedavg", "fedp2p", "gossip"]
+    R = rounds or (12 if quick else 40)
+    int8_drops, int8_reduction = [], None
+    for ds_name, (net, data) in _datasets(quick).items():
+        fl = FLConfig(num_clients=data.num_clients, num_clusters=5,
+                      devices_per_cluster=2, participation=10,
+                      local_epochs=5, batch_size=10, lr=0.05)
+        sim = Simulator(net, data, fl)
+        n_params = sum(int(l.size)
+                       for l in jax.tree.leaves(sim.init_params(0)))
+        p_full = CommParams(4.0 * n_params, SERVER_BW, SERVER_BW / GAMMA,
+                            ALPHA)
+        for algo in algos:
+            proto = protocols.get(algo)
+            base = sim.run(rounds=R, algorithm=algo, seed=0, codec="none")
+            for cname in codecs:
+                codec = compression.get(cname)
+                hist = (base if cname == "none"
+                        else sim.run(rounds=R, algorithm=algo, seed=0,
+                                     codec=cname))
+                bits = codec.bits_per_param()
+                p_c = p_full.with_codec(codec)
+                bytes_round = p_c.wire_bytes          # one client upload
+                reduction = 32.0 / bits
+                drop = base.best_acc - hist.best_acc
+                rows.append((
+                    f"compression/{ds_name}/{algo}/{cname}/best_acc",
+                    hist.best_acc,
+                    f"bits={bits:.3f};bytes_per_round={bytes_round:.0f};"
+                    f"reduction={reduction:.2f}x;acc_drop={drop:+.4f};"
+                    f"h_fedp2p={min_h_fedp2p(p_c, 10):.2f}s"))
+                frontier.setdefault(ds_name, {}).setdefault(algo, []).append(
+                    {"codec": cname, "bits_per_param": bits,
+                     "bytes_per_round": bytes_round,
+                     "bytes_reduction": reduction,
+                     "best_acc": hist.best_acc, "acc_drop": drop,
+                     "acc_curve": hist.acc, "acc_rounds": hist.acc_rounds})
+                if cname == "int8":
+                    int8_drops.append(drop)
+                    int8_reduction = reduction
+    # the acceptance claims, as explicit tracked rows
+    rows.append(("compression/claim/int8_bytes_reduction", int8_reduction,
+                 "acceptance: >= 3.5x fewer wire bytes per round"))
+    rows.append(("compression/claim/int8_worst_acc_drop", max(int8_drops),
+                 "acceptance: < 0.01 (1%) accuracy drop on the paper nets"))
+    return rows, frontier
+
+
+def main(quick: bool = True, out_json: str = ""):
+    rows, frontier = run(quick=quick)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"quick": quick, "frontier": frontier,
+                       "rows": [{"name": n, "value": float(v), "derived": d}
+                                for n, v, d in rows]}, f, indent=1)
+        print(f"wrote {out_json}")
+    from benchmarks.common import print_rows
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="CI-sized sweep (the default)")
+    mode.add_argument("--full", action="store_true",
+                      help="paper-scale datasets/protocols/rounds")
+    ap.add_argument("--out", default="results/compression_sweep.json")
+    args = ap.parse_args()
+    import os
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    main(quick=not args.full, out_json=args.out)

@@ -50,13 +50,19 @@ def run(quick: bool = True):
         bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
         frac = r["compute_s"] / bound if bound else 0.0
         fits = r["peak_mem_per_device_gib"] <= 16.0
+        # federated-round artifacts stamped by dryrun --codec carry the
+        # codec-adjusted analytic wire cost alongside the measured terms
+        codec = (f"codec={r['codec']};bits={r['bits_per_param']:.3f};"
+                 f"wireB={r['wire_bytes_per_client']:.0f};"
+                 f"comm_model={r['comm_model_h_s']:.4f}s;"
+                 if "codec" in r else "")
         out.append((
             name, bound,
             f"dom={r['dominant']};compute={r['compute_s']:.4f}s;"
             f"memory={r['memory_s']:.4f}s;coll={r['collective_s']:.4f}s;"
             f"roofline_frac={frac:.3f};useful={r['useful_flops_ratio']:.2f};"
             f"mem={r['peak_mem_per_device_gib']:.2f}GiB;"
-            f"fits_v5e={'Y' if fits else 'N'};"
+            f"fits_v5e={'Y' if fits else 'N'};{codec}"
             f"note={NOTES.get(r['dominant'], '')}"))
     return out
 

@@ -23,8 +23,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (accuracy, comm_time, kernel_bench, lq_sweep,
-                            roofline, stragglers, theory_bound, topology_gain)
+    from benchmarks import (accuracy, comm_time, compression_sweep,
+                            kernel_bench, lq_sweep, roofline, stragglers,
+                            theory_bound, topology_gain)
     modules = {
         "accuracy": lambda: accuracy.run(quick=quick)[0],   # Table 1 + Fig 2
         "comm_time": lambda: comm_time.run(quick=quick),    # Fig 3
@@ -33,6 +34,8 @@ def main(argv=None) -> None:
         "theory_bound": lambda: theory_bound.run(quick=quick),  # §3.3
         "topology_gain": lambda: topology_gain.run(quick=quick),  # §5
         "kernels": lambda: kernel_bench.run(quick=quick),
+        # accuracy-vs-bits frontier of the quantized-exchange codecs
+        "compression": lambda: compression_sweep.run(quick=quick)[0],
         "roofline": lambda: roofline.run(quick=quick),      # deliverable (g)
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,36 @@
+"""repro.compression — the pluggable quantized-exchange codec registry.
+
+    codec = compression.get("int8")
+    enc = codec.encode(flat, key=k_round)       # after kernels.ops.pack_tree
+    flat_hat = codec.decode(enc, flat.shape)    # before unpack_tree
+    bits = codec.bits_per_param()               # §3.2 wire width
+
+One object per wire format carries its encode/decode pair over the
+``[N, n]`` packed client buffer and its cost-model width (``base.Codec``).
+The registry mirrors ``repro.protocols``: a new codec is one dataclass plus
+one ``register`` call, and every consumer — ``Protocol.apply_mixing``, the
+mesh ``psum_mix`` lowerings (via ``RoundContext.codec``), the engines'
+``codec=`` knob, ``CommParams.with_codec`` — dispatches through
+``get``/``as_codec``/``active``. Stateful codecs (error feedback) declare
+``stateful = True`` and the engines thread their residuals through the
+``lax.scan`` carry using ``init_feedback_state``/``feedback_wire_tree``.
+
+Registered: ``none`` (32b identity), ``bf16`` (16b truncation), ``int8``
+(8.125b: stochastic rounding, per-chunk absmax scales), ``topk`` (64·density
+bits: magnitude sparsification + error feedback).
+"""
+from repro.compression.base import (  # noqa: F401
+    Codec, active, as_codec, feedback_encode, feedback_wire_tree, get,
+    init_feedback_state, names, register, transmit, unregister, wire_tree,
+)
+from repro.compression.codecs import (  # noqa: F401
+    BF16Codec, Int8Codec, Int8Encoded, NoneCodec, TopKCodec, TopKEncoded,
+)
+
+__all__ = [
+    "Codec", "register", "unregister", "get", "names", "as_codec", "active",
+    "transmit", "feedback_encode", "wire_tree", "feedback_wire_tree",
+    "init_feedback_state",
+    "NoneCodec", "BF16Codec", "Int8Codec", "Int8Encoded", "TopKCodec",
+    "TopKEncoded",
+]

@@ -1,0 +1,233 @@
+"""The pluggable lossy-exchange Codec interface + registry.
+
+The paper's 10X headline is a *communication* claim, and quantization /
+sparsification is the complementary lever to topology-aware exchange
+(Shahid et al. 2021, arXiv:2107.10996; Le et al. 2024, arXiv:2405.20431).
+A ``Codec`` describes what one client actually puts on the wire each round:
+
+  * ``encode(x, key=...)``  — lossy-compress a ``[N, n]`` float buffer
+    (N clients, n params per client) into the codec's wire record,
+  * ``decode(enc, shape)``  — reconstruct the float32 buffer the receivers
+    integrate (the lossy round trip the protocols mix),
+  * ``bits_per_param()``    — the §3.2 cost-model width: how many wire bits
+    one parameter costs, *including* side information (scales, indices),
+    against the 32-bit full-precision baseline.
+
+Codecs are frozen dataclasses: hashable (usable as jit static arguments and
+``RoundContext`` meta fields), stateless objects. Codecs that need cross-
+round state (error-feedback residuals — see ``TopKCodec``) set
+``stateful = True`` and the *engines* carry the residual through their
+``lax.scan`` carries; the codec itself stays a pure value.
+
+Where the codec sits (ROADMAP "Kernels" seam): the dense path quantizes the
+``[D, sum(sizes)]`` round-delta buffer right after ``kernels.ops.pack_tree``
+and dequantizes before ``unpack_tree``; the mesh path wraps each ``[D, ...]``
+leaf in a quantize/dequantize round trip before the grouped psums (rows =
+clients on both paths, so per-chunk scales are always per-client). What is
+compressed is always the round DELTA ``f_new - f_old`` against the
+round-start state the receivers hold (FedPAQ-style), never raw parameters
+— see ``transmit``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Codec:
+    """Abstract lossy wire format. Subclass + ``register`` to add one.
+
+    Implementations must be pure (the same ``(x, key)`` always encodes the
+    same record) and every method jit-traceable. ``encode``/``decode``
+    operate on 2-D ``[N, n]`` buffers with clients as rows; callers reshape
+    leaves / packed buffers accordingly (see ``wire_tree``).
+    """
+
+    #: registry key, e.g. "int8"
+    name = ""
+    #: True -> the exchange carries an error-feedback residual that engines
+    #: must thread through their scan carries (see ``feedback_wire_tree``)
+    stateful = False
+    #: True -> encode/decode are the identity; engines strip the codec so
+    #: the no-compression path stays bit-for-bit the pre-codec program
+    is_identity = False
+
+    def bits_per_param(self) -> float:
+        """Wire bits per parameter, side information included (32 = none)."""
+        raise NotImplementedError
+
+    def encode(self, x: jnp.ndarray, *, key=None):
+        """[N, n] float buffer -> wire record (a pytree of arrays)."""
+        raise NotImplementedError
+
+    def decode(self, enc, shape: Tuple[int, int]) -> jnp.ndarray:
+        """Wire record -> [N, n] float32 reconstruction (``shape`` is the
+        original buffer shape — sparse/padded records need it)."""
+        raise NotImplementedError
+
+    def roundtrip(self, x: jnp.ndarray, *, key=None) -> jnp.ndarray:
+        """decode(encode(x)) — what the receivers see, as float32."""
+        x = jnp.asarray(x)
+        return self.decode(self.encode(x, key=key), x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Codec] = {}
+
+CodecLike = Union[None, str, Codec]
+
+
+def register(codec: Codec) -> Codec:
+    """Register a Codec instance under ``codec.name``."""
+    if not codec.name:
+        raise ValueError("codec must define a non-empty .name")
+    if codec.name in _REGISTRY:
+        raise ValueError(f"codec {codec.name!r} is already registered")
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def unregister(name: str) -> None:
+    """Remove a registered codec (plugin teardown / tests)."""
+    _REGISTRY.pop(name, None)
+
+
+def names() -> Tuple[str, ...]:
+    """Registered codec names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def get(name: str) -> Codec:
+    """Look up a registered codec; unknown names raise (never a silent
+    full-precision fallback)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; registered codecs: "
+            f"{', '.join(names())}") from None
+
+
+def as_codec(codec: CodecLike) -> Codec:
+    """Normalize None | name | Codec to a Codec instance (None -> 'none')."""
+    if codec is None:
+        return get("none")
+    if isinstance(codec, str):
+        return get(codec)
+    return codec
+
+
+def active(codec: CodecLike) -> Optional[Codec]:
+    """Like ``as_codec`` but maps identity codecs to ``None`` — the form the
+    engines branch on so ``codec='none'`` traces the exact pre-codec
+    program (bit-for-bit, not just numerically equal)."""
+    c = as_codec(codec)
+    return None if c.is_identity else c
+
+
+# ---------------------------------------------------------------------------
+# Exchange helpers (shared by ops.fed_mix_tree and the engines)
+# ---------------------------------------------------------------------------
+
+def feedback_encode(codec: Codec, delta: jnp.ndarray, residual=None, *,
+                    key=None):
+    """THE error-feedback wire algebra, in one place: add the carried
+    residual, encode, and split off the new compression error. Returns
+    ``(enc, shape, new_residual)`` — the wire record, the buffer shape
+    ``decode`` needs, and ``(delta + residual) - decode(enc)`` for
+    stateful codecs (``None`` otherwise). ``transmit`` (mesh per-leaf
+    wire) and ``ops.fed_mix_tree`` (dense packed seam, which hands ``enc``
+    itself to the fused int8 kernel) both sit on this helper so the two
+    paths can never diverge in exchange semantics.
+    """
+    df = jnp.asarray(delta).astype(jnp.float32)
+    if residual is not None:
+        df = df + residual
+    enc = codec.encode(df, key=key)
+    new_residual = (df - codec.decode(enc, df.shape)) if codec.stateful \
+        else None
+    return enc, df.shape, new_residual
+
+
+def transmit(codec: Codec, delta: jnp.ndarray, residual=None, *, key=None):
+    """One lossy wire exchange of a ``[N, n]`` update buffer with optional
+    error feedback.
+
+    What crosses the wire is always a round DELTA (``f_new - f_old``
+    against the round-start state the receivers already hold), never raw
+    parameters: deltas are small and uniformly scaled (so per-chunk int8
+    scales are well conditioned) and sparsifying codecs drop *update* mass
+    rather than zeroing 95% of the model itself.
+
+    Returns ``(delta_hat, new_residual)``: the float32 reconstruction the
+    receivers add to their base, and the compression error ``(delta +
+    residual) - delta_hat`` to carry into the next round (``None`` for
+    stateless codecs).
+    """
+    enc, shape, new_residual = feedback_encode(codec, delta, residual,
+                                               key=key)
+    return codec.decode(enc, shape), new_residual
+
+
+def _leaf_key(key, i: int):
+    return None if key is None else jax.random.fold_in(key, i)
+
+
+def _leaf2d(leaf):
+    return leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+
+
+def wire_tree(codec: Codec, f_new, f_old, *, key=None):
+    """Stateless per-leaf wire: every f_new leaf is replaced by
+    ``f_old + roundtrip(f_new - f_old)`` — the reconstruction receivers
+    hold after the senders upload their compressed round deltas. Leaves
+    are flattened to [N, size] (chunk boundaries never cross leaves) and
+    cast back to their own dtypes. Every op is client-diagonal, so under
+    GSPMD this adds zero collectives — it is the mesh-path wire."""
+    new_leaves, treedef = jax.tree_util.tree_flatten(f_new)
+    old_leaves = jax.tree_util.tree_flatten(f_old)[0]
+    out = []
+    for i, (new, old) in enumerate(zip(new_leaves, old_leaves)):
+        base = _leaf2d(old)
+        d_hat, _ = transmit(codec, _leaf2d(new) - base,
+                            key=_leaf_key(key, i))
+        out.append((base + d_hat).reshape(new.shape).astype(new.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def feedback_wire_tree(codec: Codec, f_new, f_old, state, *, key=None):
+    """Per-leaf error-feedback wire for stateful codecs: returns
+    ``(tree_tx, new_state)`` where ``tree_tx`` carries the reconstructed
+    post-wire leaves (original dtypes) and ``new_state`` the float32
+    residual pytree (same structure, leaves [N, size])."""
+    new_leaves, treedef = jax.tree_util.tree_flatten(f_new)
+    old_leaves = jax.tree_util.tree_flatten(f_old)[0]
+    res_leaves = jax.tree_util.tree_flatten(state)[0]
+    tx, new_res = [], []
+    for i, (new, old, res) in enumerate(zip(new_leaves, old_leaves,
+                                            res_leaves)):
+        base = _leaf2d(old)
+        d_hat, r = transmit(codec, _leaf2d(new) - base, res,
+                            key=_leaf_key(key, i))
+        tx.append((base + d_hat).reshape(new.shape).astype(new.dtype))
+        new_res.append(r)
+    return (jax.tree_util.tree_unflatten(treedef, tx),
+            jax.tree_util.tree_unflatten(treedef, new_res))
+
+
+def init_feedback_state(codec: Optional[Codec], tree):
+    """Zero error-feedback residuals for a stacked pytree (leaves [N, ...])
+    — the initial scan-carry state engines thread; ``None`` when the codec
+    carries no state."""
+    if codec is None or not codec.stateful:
+        return None
+    return jax.tree.map(
+        lambda l: jnp.zeros((l.shape[0], int(l.size) // l.shape[0]),
+                            jnp.float32), tree)

@@ -219,6 +219,10 @@ class FLConfig:
     # §5: upgrade the algorithm to its "_topo" hop-aware variant when one
     # is registered (fedp2p -> fedp2p_topo)
     topology_aware: bool = False
+    # any repro.compression registry name (none | bf16 | int8 | topk):
+    # the lossy wire format every exchanged model update goes through.
+    # "none" keeps rounds bit-for-bit the uncompressed program.
+    codec: str = "none"
 
 
 # ---------------------------------------------------------------------------

@@ -3,12 +3,27 @@
   H_avg  = (1 + alpha) M P / B_s
   H_p2p  = (1 + alpha) L M / B_s  +  P M / (L B_d)  +  2 M / B_d
   L*     = A sqrt(P),  A = sqrt(B_s / ((1 + alpha) B_d))
-  min H_p2p = (2 M / B_d) (P / L* + 1)
-  R      = H_avg / min H_p2p = (1+alpha) P / (2 sqrt(gamma (1+alpha) P) + 2 gamma)
+  min H_p2p = H_p2p at clamp(L*, [1, P])
+  R      = H_avg / min H_p2p
+           (= Eq. (2), (1+alpha) P / (2 sqrt(gamma (1+alpha) P) + 2 gamma),
+            whenever the continuous optimum L* already lies in [1, P])
 
-where M = model bytes, P = sampled devices/round, B_s = server uplink
-bandwidth, B_d = device-device bandwidth, alpha = server down/up asymmetry,
-gamma = B_s / B_d.
+where M = wire bytes (see below), P = sampled devices/round, B_s = server
+uplink bandwidth, B_d = device-device bandwidth, alpha = server down/up
+asymmetry, gamma = B_s / B_d.
+
+The continuous optimum L* = A sqrt(P) can exceed P (few sampled devices,
+cheap server links) or drop below 1 — both unphysical cluster counts
+(clusters need at least one device; there are at most P of them). H_p2p is
+convex in L, so the constrained optimum sits at the clamped boundary:
+``min_h_fedp2p`` and ``speedup_R`` evaluate there, and the closed forms
+above are exact only in the interior.
+
+Quantized exchange: ``bits_per_param`` (default 32 — full precision) scales
+``model_bytes`` to what actually crosses the link, ``wire_bytes = M *
+bits/32``. Every H(·) prices wire bytes, so one ``p.with_codec("int8")``
+re-prices the whole model; side information (scales, indices) is already
+inside the codec's ``bits_per_param``.
 
 Everything is plain float math (also usable inside jit). A TPU-pod
 instantiation (`tpu_comm_params`) maps the same model onto ICI/DCN numbers —
@@ -17,57 +32,79 @@ distributed runtime (see DESIGN.md §3).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
 class CommParams:
-    model_bytes: float            # M
+    model_bytes: float            # M at full precision (32-bit params)
     server_bw: float              # B_s  (bytes/s)
     device_bw: float              # B_d  (bytes/s)
     alpha: float = 1.0            # downlink/uplink asymmetry (>= 1)
+    bits_per_param: float = 32.0  # codec-adjusted wire width (32 = none)
 
     @property
     def gamma(self) -> float:
         return self.server_bw / self.device_bw
 
+    @property
+    def wire_bytes(self) -> float:
+        """Bytes one model actually puts on the link under the codec."""
+        return self.model_bytes * self.bits_per_param / 32.0
+
+    def with_codec(self, codec) -> "CommParams":
+        """Re-price for a ``repro.compression`` codec (name or Codec):
+        every H(·) then reports codec-adjusted bytes."""
+        from repro.compression import as_codec
+        return dataclasses.replace(
+            self, bits_per_param=as_codec(codec).bits_per_param())
+
 
 def h_fedavg(p: CommParams, P: int) -> float:
     """Communication time of one FedAvg round with P sampled devices."""
-    return (1.0 + p.alpha) * p.model_bytes * P / p.server_bw
+    return (1.0 + p.alpha) * p.wire_bytes * P / p.server_bw
 
 
-def h_fedp2p(p: CommParams, P: int, L: int) -> float:
+def h_fedp2p(p: CommParams, P: int, L: float) -> float:
     """Communication time of one FedP2P round with L local P2P networks."""
-    return ((1.0 + p.alpha) * L * p.model_bytes / p.server_bw
-            + P * p.model_bytes / (L * p.device_bw)
-            + 2.0 * p.model_bytes / p.device_bw)
+    return ((1.0 + p.alpha) * L * p.wire_bytes / p.server_bw
+            + P * p.wire_bytes / (L * p.device_bw)
+            + 2.0 * p.wire_bytes / p.device_bw)
 
 
 def optimal_L(p: CommParams, P: int) -> float:
-    """L* = A sqrt(P), A = sqrt(B_s / ((1+alpha) B_d)) — continuous optimum."""
+    """L* = A sqrt(P), A = sqrt(B_s / ((1+alpha) B_d)) — the UNCONSTRAINED
+    continuous optimum; may fall outside the physical range [1, P]."""
     A = math.sqrt(p.server_bw / ((1.0 + p.alpha) * p.device_bw))
     return A * math.sqrt(P)
 
 
+def clamped_optimal_L(p: CommParams, P: int) -> float:
+    """L* clamped to the physical cluster-count range [1, P] (H_p2p is
+    convex in L, so this is the constrained optimum)."""
+    return min(max(optimal_L(p, P), 1.0), float(P))
+
+
 def min_h_fedp2p(p: CommParams, P: int) -> float:
-    """min_L H_p2p = (2M/B_d)(P/L* + 1)."""
-    L = optimal_L(p, P)
-    return (2.0 * p.model_bytes / p.device_bw) * (P / L + 1.0)
+    """min_{L in [1, P]} H_p2p — the closed form (2M/B_d)(P/L* + 1) exactly
+    when L* is interior, the boundary value otherwise."""
+    return h_fedp2p(p, P, clamped_optimal_L(p, P))
 
 
 def speedup_R(p: CommParams, P: int) -> float:
-    """Eq. (2): R = (1+a)P / (2 sqrt(gamma (1+a) P) + 2 gamma)."""
-    a, g = p.alpha, p.gamma
-    return (1.0 + a) * P / (2.0 * math.sqrt(g * (1.0 + a) * P) + 2.0 * g)
+    """Eq. (2): R = H_avg / min H_p2p, with the physically-clamped L —
+    the closed form (1+a)P / (2 sqrt(gamma (1+a) P) + 2 gamma) whenever
+    L* is interior."""
+    return h_fedavg(p, P) / min_h_fedp2p(p, P)
 
 
-def allreduce_time(model_bytes: float, n: int, bw: float) -> float:
+def allreduce_time(wire_bytes: float, n: int, bw: float) -> float:
     """Ring allreduce: 2 (n-1)/n * M / bw (paper §3.2 footnote)."""
     if n <= 1:
         return 0.0
-    return 2.0 * (n - 1) / n * model_bytes / bw
+    return 2.0 * (n - 1) / n * wire_bytes / bw
 
 
 # ---------------------------------------------------------------------------

@@ -45,7 +45,8 @@ def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
                          remat: bool = True,
                          counts=None,
                          out_shardings=None,
-                         mesh_info=None) -> Callable:
+                         mesh_info=None,
+                         codec=None) -> Callable:
     """Returns round_fn(f_params, batches, survive, key,
     do_global_sync=True) -> (f_params, mean_loss).
 
@@ -56,11 +57,15 @@ def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
     ``algorithm`` is any ``repro.protocols`` registry name (default:
     fl.algorithm) — unknown names raise ValueError. ``counts`` carries
     non-uniform per-client data weights |D_i| (default: uniform) into the
-    protocols' weighted psums.
+    protocols' weighted psums. ``codec`` is any ``repro.compression``
+    registry name/Codec (default: fl.codec) — the lossy wire every
+    exchanged update goes through (quantize/dequantize wrapped around the
+    grouped psums on the mesh).
     """
     engine = MeshEngine(model, fl, num_clients_dev, local_steps,
                         algorithm=algorithm, counts=counts, remat=remat,
-                        out_shardings=out_shardings, mesh_info=mesh_info)
+                        out_shardings=out_shardings, mesh_info=mesh_info,
+                        codec=codec)
     return engine.round_fn
 
 

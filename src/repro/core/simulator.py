@@ -69,35 +69,52 @@ class Simulator:
             "test_x": jnp.asarray(data.test_x), "test_y": jnp.asarray(data.test_y),
             "test_mask": jnp.asarray(data.test_mask),
         }
-        self._engines: Dict[str, DenseEngine] = {}
+        self._engines: Dict[tuple, DenseEngine] = {}
 
     def init_params(self, seed: int = 0):
         return init_paper_net(jax.random.PRNGKey(seed), self.net)
 
-    def engine(self, algorithm: str) -> DenseEngine:
+    def engine(self, algorithm: str, codec=None) -> DenseEngine:
         """Registry dispatch — unknown names raise ValueError listing the
-        registered protocols (never a silent FedAvg fallback)."""
+        registered protocols (never a silent FedAvg fallback). ``codec``
+        is any ``repro.compression`` name/Codec (default: ``fl.codec``);
+        engines are cached per (protocol, codec) pair."""
+        from repro import compression
         proto = protocols.resolve(algorithm,
                                   topology_aware=self.fl.topology_aware)
-        if proto.name not in self._engines:
+        codec = compression.as_codec(
+            codec if codec is not None else self.fl.codec)
+        # key on the (frozen, hashable) codec instance, not its name —
+        # Int8Codec(chunk=64) must never reuse a chunk=256 engine
+        cache_key = (proto.name, codec)
+        if cache_key not in self._engines:
             if proto.needs_topology and self.topology is None:
                 self.topology = make_topology(self.fl.num_clients,
                                               seed=self.fl.seed)
-            self._engines[proto.name] = DenseEngine(
+            self._engines[cache_key] = DenseEngine(
                 self.net, self.data_dev, self.fl, proto, self.topology,
-                mix_use_pallas=self.mix_use_pallas)
-        return self._engines[proto.name]
+                mix_use_pallas=self.mix_use_pallas, codec=codec)
+        return self._engines[cache_key]
 
     @property
     def evaluate(self):
-        """Jitted params -> (sample-weighted acc, client-mean acc)."""
+        """Jitted params -> (sample-weighted acc, client-mean acc).
+        Evaluation is codec-independent, so any cached engine of the
+        configured protocol serves it — never builds a second engine just
+        because runs used a codec override."""
+        proto = protocols.resolve(self.fl.algorithm,
+                                  topology_aware=self.fl.topology_aware)
+        for (pname, _), eng in self._engines.items():
+            if pname == proto.name:
+                return eng.evaluate
         return self.engine(self.fl.algorithm).evaluate
 
     def run(self, rounds: int = 0, algorithm: str = "", seed: int = 0,
-            eval_every: int = 1, verbose: bool = False) -> History:
+            eval_every: int = 1, verbose: bool = False,
+            codec=None) -> History:
         rounds = rounds or self.fl.rounds
         algorithm = algorithm or self.fl.algorithm
-        engine = self.engine(algorithm)
+        engine = self.engine(algorithm, codec=codec)
         params = self.init_params(seed)
         key = jax.random.PRNGKey(seed + 1)
         _, metrics = engine.run_rounds(params, key, rounds,

@@ -23,6 +23,7 @@ from repro.kernels import ref
 from repro.kernels.backend import on_tpu  # noqa: F401 — re-exported
 from repro.kernels.fed_aggregate import fed_aggregate as _fed_aggregate_pallas
 from repro.kernels.fed_mix import fed_mix as _fed_mix_pallas
+from repro.kernels.fed_mix_q import fed_mix_q as _fed_mix_q_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
@@ -42,9 +43,27 @@ class TreeSpec(NamedTuple):
 def pack_tree(tree) -> Tuple[jnp.ndarray, TreeSpec]:
     """Flatten a stacked pytree (leaves [N, ...]) into one [N, sum(sizes)]
     buffer + the spec to unpack it. Leaf dtypes are preserved per-leaf in the
-    spec; the buffer takes the promoted common dtype."""
+    spec; the buffer takes the promoted common dtype. Raises ValueError on an
+    empty pytree, scalar leaves, or leaves whose leading (client) axes
+    disagree — each of those would otherwise mix misaligned buffers or die
+    with an opaque IndexError deep in the packing."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("pack_tree: empty pytree (no array leaves) — "
+                         "nothing to pack")
+    for i, leaf in enumerate(leaves):
+        if getattr(leaf, "ndim", 0) < 1:
+            raise ValueError(
+                f"pack_tree: leaf {i} is a scalar (shape "
+                f"{getattr(leaf, 'shape', ())}); every leaf needs a leading "
+                "[N] client axis")
     n = leaves[0].shape[0]
+    bad = {l.shape[0] for l in leaves if l.shape[0] != n}
+    if bad:
+        raise ValueError(
+            f"pack_tree: leaves disagree on the leading client axis — got "
+            f"N={n} and {sorted(bad)}; all leaves must share one [N, ...] "
+            "stacking")
     spec = TreeSpec(treedef,
                     tuple(l.shape[1:] for l in leaves),
                     tuple(l.dtype for l in leaves),
@@ -92,10 +111,43 @@ def fed_mix(m_new, m_old, x_new, x_old, *, use_pallas: bool | None = None,
     return _fed_mix_pallas(m_new, m_old, x_new, x_old, interpret=interpret)
 
 
-def fed_mix_tree(m_new, m_old, f_new, f_old, *, use_pallas: bool | None = None,
+def fed_mix_q(m_new, m_old, q_new, scales, x_old, *, chunk: int = 256,
+              out_dtype=None, use_pallas: bool | None = None,
+              interpret: bool | None = None):
+    """Fused quantized mixing O = M_new @ dequant(Q_new, scales) + M_old @
+    X_old on the int8 wire record (``compression.Int8Encoded`` layout):
+    q_new int8 [D, Pq], one f32 scale per ``chunk`` params. The Pallas path
+    dequantizes tiles inline in the MXU loop — no full-precision copy of
+    the quantized buffer is ever materialized."""
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.fed_mix_q_ref(m_new, m_old, q_new, scales, x_old,
+                                 chunk=chunk, out_dtype=out_dtype)
+    return _fed_mix_q_pallas(m_new, m_old, q_new, scales, x_old, chunk=chunk,
+                             out_dtype=out_dtype, interpret=interpret)
+
+
+def fed_mix_tree(m_new, m_old, f_new, f_old, *, codec=None, codec_state=None,
+                 key=None, use_pallas: bool | None = None,
                  interpret: bool | None = None):
     """Apply the dense mixing matrices over [D, ...] pytrees through ONE
-    fused flat pass: pack both trees once, run ``fed_mix``, unpack."""
+    fused flat pass: pack both trees once, run ``fed_mix``, unpack.
+
+    ``codec`` (a ``repro.compression`` name or Codec) puts the round DELTA
+    — ``flat_new - flat_old``, what the clients actually upload against the
+    round-start state the receivers hold — through the lossy exchange at
+    the packing seam: quantize right after ``pack_tree``, dequantize before
+    ``unpack_tree``; f_old stays exact. The int8 codec never materializes
+    the dequantized reconstruction: the fused ``fed_mix_q`` kernel
+    contracts the int8 wire record directly, folding the base back in as
+    ``M_new @ dq(Q) + (M_new + M_old) @ X_old`` (= ``M_new @ (X_old + dq) +
+    M_old @ X_old``). When ``codec`` is given the call returns ``(tree,
+    new_codec_state)`` — ``codec_state`` is the [D, sum(sizes)] f32
+    error-feedback residual of stateful codecs (auto-initialized to zeros
+    when None) and passes through untouched for stateless ones.
+    """
+    from repro import compression
+
     flat_new, spec = pack_tree(f_new)
     flat_old, spec_old = pack_tree(f_old)
     if spec_old.treedef != spec.treedef or spec_old.shapes != spec.shapes:
@@ -105,9 +157,34 @@ def fed_mix_tree(m_new, m_old, f_new, f_old, *, use_pallas: bool | None = None,
             f"fed_mix_tree: f_new/f_old tree structures differ "
             f"(new={spec.treedef} shapes={spec.shapes}, "
             f"old={spec_old.treedef} shapes={spec_old.shapes})")
-    out = fed_mix(m_new, m_old, flat_new, flat_old,
-                  use_pallas=use_pallas, interpret=interpret)
-    return unpack_tree(out, spec)
+    codec_given = codec is not None
+    codec = None if not codec_given else compression.active(codec)
+    if codec is None:
+        out = fed_mix(m_new, m_old, flat_new, flat_old,
+                      use_pallas=use_pallas, interpret=interpret)
+        tree = unpack_tree(out, spec)
+        return (tree, codec_state) if codec_given else tree
+
+    base = flat_old.astype(jnp.float32)
+    d = flat_new.astype(jnp.float32) - base          # the uploaded delta
+    if codec.stateful and codec_state is None:
+        codec_state = jnp.zeros(d.shape, jnp.float32)
+    enc, d_shape, new_res = compression.feedback_encode(
+        codec, d, codec_state, key=key)
+    new_state = new_res if codec.stateful else codec_state
+    from repro.compression import Int8Codec
+    if isinstance(codec, Int8Codec):
+        # M_new @ dq(Q) + (M_new + M_old) @ X_old == M_new @ (X_old + dq)
+        # + M_old @ X_old — same two MXU contractions, int8 wire tile
+        out = fed_mix_q(m_new, m_new + m_old, enc.values, enc.scales,
+                        flat_old, chunk=codec.chunk,
+                        out_dtype=flat_new.dtype,
+                        use_pallas=use_pallas, interpret=interpret)
+    else:
+        x_hat = (base + codec.decode(enc, d_shape)).astype(flat_new.dtype)
+        out = fed_mix(m_new, m_old, x_hat, flat_old,
+                      use_pallas=use_pallas, interpret=interpret)
+    return unpack_tree(out, spec), new_state
 
 
 def flash_attention(q, k, v, *, window: int = 0,

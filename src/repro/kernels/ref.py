@@ -28,6 +28,26 @@ def fed_mix_ref(m_new: jnp.ndarray, m_old: jnp.ndarray,
     return out.astype(x_new.dtype)
 
 
+def fed_mix_q_ref(m_new: jnp.ndarray, m_old: jnp.ndarray,
+                  q_new: jnp.ndarray, scales: jnp.ndarray,
+                  x_old: jnp.ndarray, *, chunk: int = 256,
+                  out_dtype=None) -> jnp.ndarray:
+    """m_new, m_old: [D, D]; q_new: int8 [D, Pq] (Pq a multiple of chunk);
+    scales: f32 [D, Pq/chunk]; x_old: [D, P], P <= Pq -> [D, P].
+
+    The quantized-wire mixing operator: dequantize the int8 record
+    (per-chunk absmax scales), then the dense f32 mix. The independent
+    correctness contract for ``kernels.fed_mix_q``'s inline dequant.
+    """
+    d = q_new.shape[0]
+    n = x_old.shape[1]
+    v = q_new.astype(jnp.float32).reshape(d, -1, chunk)
+    xn = (v * scales.astype(jnp.float32)[..., None]).reshape(d, -1)[:, :n]
+    out = m_new.astype(jnp.float32) @ xn
+    out = out + m_old.astype(jnp.float32) @ x_old.astype(jnp.float32)
+    return out.astype(x_old.dtype if out_dtype is None else out_dtype)
+
+
 def flash_attention_ref(q, k, v, *, window: int = 0) -> jnp.ndarray:
     """q: [B,Hq,Sq,hd]; k, v: [B,Hkv,Tk,hd] -> [B,Hq,Sq,hd]. Dense softmax."""
     b, hq, sq, hd = q.shape

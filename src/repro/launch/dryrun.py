@@ -109,19 +109,23 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
                     multi_pod: bool = False, local_steps: int = 4,
                     client_batch: int = 2, seq_len: int = 4096,
-                    num_clusters: int = 4, verbose: bool = True):
+                    num_clusters: int = 4, codec: str = "none",
+                    verbose: bool = True):
     """Lower + compile one federated round of ANY registered protocol
     (``repro.protocols``) on the production mesh: one client group per
     data-axis slice, the protocol's grouped-psum ``psum_mix`` lowering for
     the sync step. The fedp2p row is the paper-representative entry in the
     roofline study; fedavg / gossip / gossip_async price the registry's
-    other traffic patterns on identical hardware."""
+    other traffic patterns on identical hardware. ``codec`` lowers the
+    quantized-exchange wire (``repro.compression``) into the same program
+    and stamps the artifact with the codec-adjusted analytic wire bytes."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro import protocols
+    from repro import compression, protocols
     from repro.config import FLConfig
     from repro.core.fedp2p import make_federated_round
     proto = protocols.get(algorithm)
+    codec_obj = compression.as_codec(codec)
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     info = make_mesh_info(cfg, mesh)
@@ -146,7 +150,8 @@ def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
                  NamedSharding(mesh, P()))
     round_fn = make_federated_round(model, fl, D, local_steps,
                                     algorithm=algorithm,
-                                    out_shardings=out_specs, mesh_info=info)
+                                    out_shardings=out_specs, mesh_info=info,
+                                    codec=codec_obj)
     bshape = (D, local_steps, client_batch, seq_len)
     batches = {"tokens": sds(bshape, jnp.int32, P(dspec, None, None, None)),
                "labels": sds(bshape, jnp.int32, P(dspec, None, None, None))}
@@ -173,7 +178,15 @@ def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
         flops_global=flops_g, bytes_global=bytes_g)
     result = report.to_dict()
     mem = compiled.memory_analysis()
+    # codec-adjusted analytic §3.2 wire cost of this round on the pod model
+    from repro.core.comm_model import tpu_comm_params
+    n_params = sum(int(l.size) for l in jax.tree.leaves(p_shapes))
+    cp = tpu_comm_params(4.0 * n_params).with_codec(codec_obj)
     result.update({"ok": True, "protocol": algorithm,
+                   "codec": codec_obj.name,
+                   "bits_per_param": codec_obj.bits_per_param(),
+                   "wire_bytes_per_client": cp.wire_bytes,
+                   "comm_model_h_s": proto.comm_time(cp, D),
                    "compile_s": round(time.time() - t0, 1),
                    "arg_bytes_per_device": float(mem.argument_size_in_bytes),
                    "temp_bytes_per_device": float(mem.temp_size_in_bytes)})
@@ -214,6 +227,9 @@ def main(argv=None):
                     help="lower one federated round of a registered "
                          "protocol (or 'all') instead of the train/serve "
                          "entry points")
+    ap.add_argument("--codec", default="none", metavar="NAME",
+                    help="repro.compression codec lowered into the "
+                         "federated round (--protocol runs only)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -230,7 +246,8 @@ def main(argv=None):
                 mesh_name = "multi" if multi else "single"
                 try:
                     results.append(dryrun_protocol(args.arch or "qwen2-1.5b",
-                                                   algo, multi_pod=multi))
+                                                   algo, multi_pod=multi,
+                                                   codec=args.codec))
                 except Exception as e:  # noqa: BLE001 — report all failures
                     traceback.print_exc()
                     failures.append((algo, mesh_name, repr(e)))

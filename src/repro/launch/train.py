@@ -74,17 +74,20 @@ def run_federated_training(arch: str, *, rounds: int = 20,
                            num_clients: int = 4, num_clusters: int = 2,
                            local_steps: int = 4, batch: int = 4,
                            seq_len: int = 64, algorithm: str = "fedp2p",
+                           codec: str = "none",
                            sync_period: int = 1, straggler_rate: float = 0.0,
                            lr: float = 5e-3, seed: int = 0,
                            counts=None, verbose: bool = True) -> Dict:
     """Paper protocol over LM clients with heterogeneous token streams.
     ``algorithm`` is any ``repro.protocols`` registry name; ``counts``
-    carries non-uniform per-client |D_i| weights onto the mesh path."""
+    carries non-uniform per-client |D_i| weights onto the mesh path;
+    ``codec`` is any ``repro.compression`` name — the lossy wire format
+    of every exchanged update."""
     cfg = get_config(arch).reduced(num_layers=2, max_d_model=128)
     model = build_model(cfg)
     fl = FLConfig(num_clusters=num_clusters, lr=lr,
                   straggler_rate=straggler_rate, sync_period=sync_period,
-                  algorithm=protocols.get(algorithm).name)
+                  algorithm=protocols.get(algorithm).name, codec=codec)
     engine = MeshEngine(model, fl, num_clients, local_steps,
                         algorithm=algorithm, counts=counts)
     params = model.init(jax.random.PRNGKey(seed))
@@ -101,6 +104,10 @@ def run_federated_training(arch: str, *, rounds: int = 20,
     key = jax.random.PRNGKey(seed + 1)
     losses = []
     done = 0
+    # stateful codecs (error feedback): the residual must survive the
+    # chunked staging, or every chunk boundary drops the feedback mass
+    stateful = engine.codec is not None and engine.codec.stateful
+    cstate = None
     while done < rounds:
         n = min(chunk_rounds, rounds - done)
         staged = [[[next(streams[c]) for _ in range(local_steps)]
@@ -109,7 +116,11 @@ def run_federated_training(arch: str, *, rounds: int = 20,
                                         for client in rnd] for rnd in staged]))
               for k in ("tokens", "labels")}
         key, kc = jax.random.split(key)
-        f_params, loss_buf = engine.run_rounds(f_params, kc, n, bt)
+        if stateful:
+            f_params, loss_buf, cstate = engine.run_rounds(
+                f_params, kc, n, bt, codec_state=cstate)
+        else:
+            f_params, loss_buf = engine.run_rounds(f_params, kc, n, bt)
         losses.extend(float(x) for x in np.asarray(loss_buf))
         done += n
     if verbose:
@@ -127,6 +138,9 @@ def main():
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--algorithm", default="fedp2p",
                     choices=protocols.names())
+    from repro import compression
+    ap.add_argument("--codec", default="none", choices=compression.names(),
+                    help="lossy wire format for federated exchange")
     ap.add_argument("--straggler-rate", type=float, default=0.0)
     ap.add_argument("--full", action="store_true", help="full (unreduced) config")
     ap.add_argument("--ckpt-dir", default=None)
@@ -137,6 +151,7 @@ def main():
     else:
         out = run_federated_training(args.arch, rounds=args.rounds,
                                      algorithm=args.algorithm,
+                                     codec=args.codec,
                                      straggler_rate=args.straggler_rate)
     print(f"loss {out['first_loss']:.4f} -> {out['final_loss']:.4f}")
 

@@ -152,5 +152,6 @@ class AsyncGossip(Protocol):
                   ctx: Optional[RoundContext] = None) -> float:
         """One pairwise phase, all pairs in parallel (half the traffic of the
         two-phase ring gossip): an n=2 ring allreduce over a device-device
-        link. No server term, no dependence on P."""
-        return allreduce_time(p.model_bytes, 2, p.device_bw)
+        link. No server term, no dependence on P. Prices codec-adjusted
+        wire bytes."""
+        return allreduce_time(p.wire_bytes, 2, p.device_bw)

@@ -142,6 +142,7 @@ class Protocol:
     # ------------------------------------------------------------------
     @staticmethod
     def apply_mixing(M_new: jnp.ndarray, M_old: jnp.ndarray, f_new, f_old, *,
+                     codec=None, codec_state=None, key=None,
                      use_pallas: Optional[bool] = None,
                      interpret: Optional[bool] = None):
         """Apply the dense mixing matrices over [D, ...] pytrees as ONE fused
@@ -149,9 +150,19 @@ class Protocol:
         ``kernels.ops.fed_mix`` computes M_new @ X_new + M_old @ X_old in a
         single kernel (Pallas on TPU, interpret under ``use_pallas=True`` on
         CPU, jnp oracle otherwise) with f32 accumulation, then the result is
-        unpacked back to the leaf shapes/dtypes."""
+        unpacked back to the leaf shapes/dtypes.
+
+        ``codec`` (a ``repro.compression`` name or Codec) puts the round
+        DELTA — ``f_new - f_old``, what the clients upload against the
+        round-start state the receivers hold — through the lossy wire at
+        the packing seam; the int8 codec runs the fused ``fed_mix_q``
+        kernel which dequantizes wire tiles inline in the MXU loop. With a
+        codec the call returns ``(tree, new_codec_state)`` (error-feedback
+        residual for stateful codecs, pass-through otherwise); ``key``
+        seeds stochastic rounding."""
         return kernel_ops.fed_mix_tree(M_new, M_old, f_new, f_old,
-                                       use_pallas=use_pallas,
+                                       codec=codec, codec_state=codec_state,
+                                       key=key, use_pallas=use_pallas,
                                        interpret=interpret)
 
     @staticmethod
@@ -160,8 +171,21 @@ class Protocol:
         shard_map with every leaf sharded along the data axes (the federated
         client axis). ``s``/``c`` are this device's survive/count slices;
         ``extras`` are replicated scalars (e.g. a matching index drawn from
-        ``ctx.key``)."""
+        ``ctx.key``).
+
+        When ``ctx.codec`` is set, every f_new leaf is first replaced by
+        what the receivers reconstruct after the wire: ``f_old +
+        roundtrip(f_new - f_old)`` (clients upload compressed round
+        *deltas* against the round-start state, per-client rows, per-leaf
+        chunking) — the quantized-exchange wire wrapped around the grouped
+        psums. All wrap ops are client-diagonal, so GSPMD emits zero extra
+        collectives; f_old (the receivers' local state) stays exact, which
+        is also why stragglers fall back to *unquantized* old params."""
         from jax.sharding import PartitionSpec as P
+        if ctx.codec is not None:
+            from repro import compression
+            f_new = compression.wire_tree(ctx.codec, f_new, f_old,
+                                          key=ctx.key)
         mesh_info = ctx.mesh_info
         names = mesh_info.dp_axes
         axes = names if len(names) > 1 else names[0]

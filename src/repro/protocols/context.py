@@ -26,7 +26,13 @@ replaces that argument soup with one pytree record:
     * ``topology``       — optional ``core.topology.Topology`` for hop-aware
                            protocols (cost models, partitioners),
     * ``mesh_info``      — optional ``sharding.rules.MeshInfo``; presence
-                           selects the shard_map lowering in engines.
+                           selects the shard_map lowering in engines,
+    * ``codec``          — optional ``repro.compression.Codec`` (an active,
+                           non-identity one): mesh lowerings wrap every
+                           f_new leaf in the codec's quantize/dequantize
+                           round trip before the grouped psums (the
+                           quantized-exchange wire). ``None`` = exact
+                           full-precision exchange.
 
 Contexts are normally constructed *inside* a traced round program (see
 ``protocols.engine``), so the static fields never need to cross a jit
@@ -59,6 +65,7 @@ class RoundContext:
     do_global_sync: bool = True
     topology: Optional[Topology] = None
     mesh_info: Any = None
+    codec: Any = None
 
     @property
     def num_clients(self) -> int:
@@ -72,14 +79,15 @@ class RoundContext:
 jax.tree_util.register_dataclass(
     RoundContext,
     data_fields=("key", "round_index", "survive", "counts", "cluster_ids"),
-    meta_fields=("num_clusters", "do_global_sync", "topology", "mesh_info"),
+    meta_fields=("num_clusters", "do_global_sync", "topology", "mesh_info",
+                 "codec"),
 )
 
 
 def make_context(*, key=None, round_index=0, survive=None, counts=None,
                  cluster_ids=None, num_clusters: Optional[int] = None,
                  do_global_sync: bool = True, topology: Optional[Topology] = None,
-                 mesh_info=None, num_clients: Optional[int] = None
+                 mesh_info=None, codec=None, num_clients: Optional[int] = None
                  ) -> RoundContext:
     """Build a RoundContext, defaulting every unspecified field.
 
@@ -89,7 +97,13 @@ def make_context(*, key=None, round_index=0, survive=None, counts=None,
     an explicit value. ``key`` stays ``None`` when omitted — deterministic
     protocols never read it, and stochastic ones (e.g. ``gossip_async``)
     raise rather than silently reusing one fixed draw every round.
+    ``codec`` accepts a ``repro.compression`` name or Codec and is stored
+    in its *active* form (identity codecs -> ``None``) so an uncompressed
+    context always traces the exact pre-codec program.
     """
+    if codec is not None:
+        from repro.compression import active
+        codec = active(codec)
     D = num_clients
     if D is None:
         for arr in (survive, counts, cluster_ids):
@@ -116,4 +130,4 @@ def make_context(*, key=None, round_index=0, survive=None, counts=None,
         key=key, round_index=jnp.asarray(round_index, jnp.int32),
         survive=survive, counts=counts, cluster_ids=cluster_ids,
         num_clusters=int(num_clusters), do_global_sync=bool(do_global_sync),
-        topology=topology, mesh_info=mesh_info)
+        topology=topology, mesh_info=mesh_info, codec=codec)

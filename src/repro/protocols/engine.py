@@ -29,6 +29,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compression
 from repro.config import FLConfig
 from repro.configs.paper_models import PaperNetConfig
 from repro.core.straggler import straggler_mask
@@ -110,7 +111,7 @@ class DenseEngine:
 
     def __init__(self, net: PaperNetConfig, data_dev: Dict, fl: FLConfig,
                  proto: Protocol, topology: Optional[Topology] = None, *,
-                 mix_use_pallas: Optional[bool] = None):
+                 mix_use_pallas: Optional[bool] = None, codec=None):
         self.net, self.fl, self.proto = net, fl, proto
         self.topology = topology
         self.data_dev = data_dev
@@ -118,6 +119,12 @@ class DenseEngine:
         #: None = auto (Pallas on TPU, jnp oracle on CPU); True forces the
         #: kernel (interpret mode off-TPU); False forces the jnp oracle
         self.mix_use_pallas = mix_use_pallas
+        #: quantized-exchange wire (``repro.compression`` name or Codec);
+        #: stored in active form — None/"none" keeps every round bit-for-bit
+        #: the uncompressed program. Stateful codecs (error feedback) make
+        #: ``round_fn`` take/return a [P, sum(sizes)] f32 residual that
+        #: ``run_rounds`` threads through the scan carry.
+        self.codec = compression.active(codec)
         local_train = make_local_trainer(net, fl)
         self._vtrain = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))
         self._vtrain_per = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0))
@@ -146,7 +153,12 @@ class DenseEngine:
         return sample_weighted, client_mean
 
     # -- one round -----------------------------------------------------
-    def _round(self, params, key, round_index=0):
+    def _round(self, params, key, round_index=0, codec_state=None):
+        """One protocol round. Without a codec: ``(params', mean_loss)`` —
+        the exact pre-codec program. With one, every mixing application
+        puts the freshly-trained client models through the lossy wire
+        (quantize after pack, dequantize before unpack) and the return
+        grows a third element: the threaded error-feedback residual."""
         proto, fl = self.proto, self.fl
         P = proto.num_participants(fl)
         L = proto.num_clusters(fl)
@@ -164,23 +176,34 @@ class DenseEngine:
                 cluster_ids=cids, num_clusters=L, do_global_sync=sync,
                 topology=self.topology)
 
+        def mix(cp, sub_round: int, sync: bool, cstate):
+            ctx = ctx_for(sub_round, sync)
+            M_new, M_old = proto.mixing_matrix(ctx)
+            if self.codec is None:
+                out = proto.apply_mixing(M_new, M_old, cp, old,
+                                         use_pallas=self.mix_use_pallas)
+                return out, cstate
+            return proto.apply_mixing(
+                M_new, M_old, cp, old, codec=self.codec, codec_state=cstate,
+                key=jax.random.fold_in(ctx.key, 0x636F6465),
+                use_pallas=self.mix_use_pallas)
+
         client_params, losses = None, jnp.zeros(())
+        cstate = codec_state
         sub_rounds = max(1, fl.sync_period)
         for r in range(sub_rounds):
             keys = jax.random.split(jax.random.fold_in(k_tr, r), P)
             if client_params is None:
                 client_params, losses = self._vtrain(params, cx, cy, cm, keys)
             else:
-                M_new, M_old = proto.mixing_matrix(ctx_for(r, False))
-                start = proto.apply_mixing(M_new, M_old, client_params, old,
-                                           use_pallas=self.mix_use_pallas)
+                start, cstate = mix(client_params, r, False, cstate)
                 client_params, losses = self._vtrain_per(start, cx, cy, cm, keys)
 
-        M_new, M_old = proto.mixing_matrix(ctx_for(sub_rounds, True))
-        mixed = proto.apply_mixing(M_new, M_old, client_params, old,
-                                   use_pallas=self.mix_use_pallas)
+        mixed, cstate = mix(client_params, sub_rounds, True, cstate)
         new_params = jax.tree.map(lambda x: jnp.mean(x, axis=0), mixed)
-        return new_params, jnp.mean(losses)
+        if self.codec is None:
+            return new_params, jnp.mean(losses)
+        return new_params, jnp.mean(losses), cstate
 
     # -- the scan-compiled training loop -------------------------------
     def run_rounds(self, params, key, T: int, eval_every: int = 1):
@@ -190,32 +213,69 @@ class DenseEngine:
         host until the caller reads the buffers. With ``eval_every > 1``
         the accuracy entries are only computed at rounds where
         (t+1) % eval_every == 0 (and the last round) — the other slots are
-        zeros the caller must not read."""
+        zeros the caller must not read.
+
+        Stateful codecs: the error-feedback residual is per-run memory —
+        zero-initialized at the start of the scan and internal to it (one
+        ``run_rounds`` call == one training run on this engine; drive
+        ``round_fn`` directly to thread residuals across calls)."""
         T, eval_every = int(T), max(1, int(eval_every))
         cache_key = (T, eval_every)
         if cache_key not in self._run_cache:
 
-            def body(carry, t):
-                params, key = carry
-                key, kr = jax.random.split(key)
-                params, loss = self._round(params, kr, t)
+            def eval_at(params, t):
                 if eval_every == 1:
-                    acc_w, acc_m = self._eval(params)
-                else:
-                    acc_w, acc_m = jax.lax.cond(
-                        jnp.logical_or((t + 1) % eval_every == 0, t == T - 1),
-                        self._eval,
-                        lambda _: (jnp.zeros(()), jnp.zeros(())), params)
-                return (params, key), (loss, acc_w, acc_m)
+                    return self._eval(params)
+                return jax.lax.cond(
+                    jnp.logical_or((t + 1) % eval_every == 0, t == T - 1),
+                    self._eval,
+                    lambda _: (jnp.zeros(()), jnp.zeros(())), params)
 
-            def run(params, key):
-                (params, _), (loss, acc_w, acc_m) = jax.lax.scan(
-                    body, (params, key), jnp.arange(T))
-                return params, {"train_loss": loss, "acc": acc_w,
-                                "acc_client_mean": acc_m}
+            if self.codec is None:
+                def body(carry, t):
+                    params, key = carry
+                    key, kr = jax.random.split(key)
+                    params, loss = self._round(params, kr, t)
+                    acc_w, acc_m = eval_at(params, t)
+                    return (params, key), (loss, acc_w, acc_m)
+
+                def run(params, key):
+                    (params, _), (loss, acc_w, acc_m) = jax.lax.scan(
+                        body, (params, key), jnp.arange(T))
+                    return params, {"train_loss": loss, "acc": acc_w,
+                                    "acc_client_mean": acc_m}
+            else:
+                # error-feedback residuals (stateful codecs) ride the scan
+                # carry as one [P, sum(sizes)] f32 buffer per participant
+                # slot; stateless codecs carry None (an empty pytree).
+                def body(carry, t):
+                    params, key, cstate = carry
+                    key, kr = jax.random.split(key)
+                    params, loss, cstate = self._round(params, kr, t, cstate)
+                    acc_w, acc_m = eval_at(params, t)
+                    return (params, key, cstate), (loss, acc_w, acc_m)
+
+                def run(params, key):
+                    cstate = self.init_codec_state(params)
+                    (params, _, _), (loss, acc_w, acc_m) = jax.lax.scan(
+                        body, (params, key, cstate), jnp.arange(T))
+                    return params, {"train_loss": loss, "acc": acc_w,
+                                    "acc_client_mean": acc_m}
 
             self._run_cache[cache_key] = jax.jit(run)
         return self._run_cache[cache_key](params, key)
+
+    def init_codec_state(self, params):
+        """Zero error-feedback residual for ``round_fn``/``run_rounds``:
+        one f32 row per participant *slot* over the packed param size, or
+        ``None`` for stateless codecs. (With random per-round participation
+        the residual is slot-indexed — the standard sampled-client
+        error-feedback memory.)"""
+        if self.codec is None or not self.codec.stateful:
+            return None
+        P = self.proto.num_participants(self.fl)
+        total = sum(int(l.size) for l in jax.tree.leaves(params))
+        return jnp.zeros((P, total), jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -243,7 +303,7 @@ class MeshEngine:
     def __init__(self, model, fl: FLConfig, num_clients_dev: int,
                  local_steps: int, *, algorithm: str = "", counts=None,
                  remat: bool = True, out_shardings=None, mesh_info=None,
-                 mix_use_pallas: Optional[bool] = None):
+                 mix_use_pallas: Optional[bool] = None, codec=None):
         self.proto = get(algorithm or fl.algorithm)
         self.fl = fl
         self.num_clients_dev = num_clients_dev
@@ -252,6 +312,15 @@ class MeshEngine:
         #: backend for the no-mesh dense fallback's fused mixing (see
         #: DenseEngine.mix_use_pallas); ignored when mesh_info is set
         self.mix_use_pallas = mix_use_pallas
+        #: quantized-exchange wire (``repro.compression`` name or Codec),
+        #: defaulting to ``fl.codec``; active form — None/"none" keeps the
+        #: round bit-for-bit the uncompressed program. On a real mesh the
+        #: codec rides ``RoundContext.codec`` into the protocol's
+        #: ``psum_mix`` (quantize/dequantize wrapped around the grouped
+        #: psums); stateful codecs additionally thread a per-leaf residual
+        #: pytree through ``run_rounds``'s scan carry.
+        self.codec = compression.active(
+            codec if codec is not None else fl.codec)
         ids = self.proto.mesh_cluster_ids(num_clients_dev, fl)
         self._cluster_ids = ids                      # concrete — mesh groups
         self._num_clusters = int(ids.max()) + 1
@@ -275,6 +344,20 @@ class MeshEngine:
 
         jit_kwargs = {"static_argnames": ("do_global_sync",)}
         if out_shardings is not None:
+            if self._codec_stateful:
+                # _round returns (f_out, loss, residual) here — extend the
+                # caller's (f_out, loss) shardings with the residual's
+                # (client-axis leaves, same layout as f_params)
+                if mesh_info is None:
+                    raise ValueError(
+                        "out_shardings with a stateful codec requires "
+                        "mesh_info (the residual sharding is derived from "
+                        "its data axes)")
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                ax = (mesh_info.dp_axes if len(mesh_info.dp_axes) > 1
+                      else mesh_info.dp_axes[0])
+                state_sh = NamedSharding(mesh_info.mesh, P(ax, None))
+                out_shardings = tuple(out_shardings) + (state_sh,)
             jit_kwargs["out_shardings"] = out_shardings
         #: jitted (f_params, batches, survive, key[, do_global_sync,
         #: round_index]) -> (f_params', mean_loss)
@@ -286,69 +369,130 @@ class MeshEngine:
             key=key, round_index=round_index, survive=survive,
             counts=self._counts, cluster_ids=self._cluster_ids,
             num_clusters=self._num_clusters, do_global_sync=do_global_sync,
-            mesh_info=self.mesh_info)
+            mesh_info=self.mesh_info, codec=self.codec)
+
+    @property
+    def _codec_stateful(self) -> bool:
+        return self.codec is not None and self.codec.stateful
 
     def _round(self, f_params, batches, survive, key,
-               do_global_sync: bool = True, round_index=0):
+               do_global_sync: bool = True, round_index=0, codec_state=None):
+        """One mesh round. Stateless codecs ride ``ctx.codec`` into the
+        protocol's ``psum_mix`` (the quantize/dequantize wire around the
+        grouped psums). Stateful ones (error feedback) split the residual
+        *here* — the engine owns cross-round state — by pre-transmitting
+        f_new and handing ``psum_mix`` an already-on-the-wire tree with the
+        codec cleared; the return grows a third element (the residual)."""
         f_new, losses = self._vlocal(f_params, batches)
         ctx = self._ctx(survive, key, round_index, bool(do_global_sync))
         if self.mesh_info is not None:
+            if self._codec_stateful:
+                if codec_state is None:
+                    codec_state = compression.init_feedback_state(
+                        self.codec, f_new)
+                f_new, codec_state = compression.feedback_wire_tree(
+                    self.codec, f_new, f_params, codec_state, key=ctx.key)
+                ctx = ctx.replace(codec=None)
             f_out = self.proto.psum_mix(f_new, f_params, ctx)
-        else:
-            M_new, M_old = self.proto.mixing_matrix(ctx)
+            loss = jnp.mean(losses)
+            return ((f_out, loss, codec_state) if self._codec_stateful
+                    else (f_out, loss))
+        M_new, M_old = self.proto.mixing_matrix(ctx)
+        if self.codec is None:
             f_out = self.proto.apply_mixing(M_new, M_old, f_new, f_params,
                                             use_pallas=self.mix_use_pallas)
+            return f_out, jnp.mean(losses)
+        # no-mesh dense fallback: codec at the pack_tree seam, residual as
+        # one [D, sum(sizes)] buffer (auto-initialized inside)
+        f_out, codec_state = self.proto.apply_mixing(
+            M_new, M_old, f_new, f_params, codec=self.codec,
+            codec_state=codec_state, key=jax.random.fold_in(key, 0x636F6465),
+            use_pallas=self.mix_use_pallas)
+        if self._codec_stateful:
+            return f_out, jnp.mean(losses), codec_state
         return f_out, jnp.mean(losses)
 
     # -- the scan-compiled training loop -------------------------------
-    def _run(self, f_params, key, batches):
+    def _run(self, f_params, key, batches, codec_state=None):
         fl, D = self.fl, self.num_clients_dev
         sp = max(1, fl.sync_period)
         T = jax.tree.leaves(batches)[0].shape[0]     # static at trace time
         n_chunks, rem = divmod(T, sp)
+        stateful = self._codec_stateful
 
-        def one_round(f_params, key, b, t, sync: bool):
+        def one_round(f_params, key, b, t, sync: bool, cstate):
             key, k_str, k_mix = jax.random.split(key, 3)
             survive = straggler_mask(k_str, D, fl.straggler_rate)
-            f_params, loss = self._round(f_params, b, survive, k_mix,
-                                         do_global_sync=sync, round_index=t)
-            return f_params, key, loss
+            out = self._round(f_params, b, survive, k_mix,
+                              do_global_sync=sync, round_index=t,
+                              codec_state=cstate)
+            if stateful:
+                f_params, loss, cstate = out
+            else:
+                f_params, loss = out
+            return f_params, key, loss, cstate
 
         def body(carry, xs):
-            f_params, key = carry
+            f_params, key, cstate = carry
             chunk, t0 = xs
             out = []
             for i in range(sp):                      # unrolled: sync static
                 b_i = jax.tree.map(lambda l: l[i], chunk)
-                f_params, key, loss = one_round(f_params, key, b_i, t0 + i,
-                                                i == sp - 1)
+                f_params, key, loss, cstate = one_round(
+                    f_params, key, b_i, t0 + i, i == sp - 1, cstate)
                 out.append(loss)
-            return (f_params, key), jnp.stack(out)
+            return (f_params, key, cstate), jnp.stack(out)
 
+        cstate = codec_state
+        if stateful and cstate is None:
+            cstate = self.init_codec_state(f_params)
         main = jax.tree.map(
             lambda l: l[:n_chunks * sp].reshape((n_chunks, sp) + l.shape[1:]),
             batches)
         t0s = jnp.arange(n_chunks, dtype=jnp.int32) * sp
-        (f_params, key), losses = jax.lax.scan(body, (f_params, key),
-                                               (main, t0s))
+        (f_params, key, cstate), losses = jax.lax.scan(
+            body, (f_params, key, cstate), (main, t0s))
         losses = losses.reshape((n_chunks * sp,))
         # T % sync_period tail rounds: never hit (t+1) % sp == 0 -> no sync
         tail = []
         for i in range(rem):
             b_i = jax.tree.map(lambda l: l[n_chunks * sp + i], batches)
-            f_params, key, loss = one_round(f_params, key, b_i,
-                                            n_chunks * sp + i, False)
+            f_params, key, loss, cstate = one_round(
+                f_params, key, b_i, n_chunks * sp + i, False, cstate)
             tail.append(loss)
         if tail:
             losses = jnp.concatenate([losses, jnp.stack(tail)])
+        if stateful:
+            return f_params, losses, cstate
         return f_params, losses
 
-    def run_rounds(self, f_params, key, T: int, batches):
+    def init_codec_state(self, f_params):
+        """Zero error-feedback residual for stateful codecs (``None``
+        otherwise): per-leaf [D, size] f32 on the mesh path, one packed
+        [D, sum(sizes)] buffer on the dense fallback."""
+        if not self._codec_stateful:
+            return None
+        if self.mesh_info is not None:
+            return compression.init_feedback_state(self.codec, f_params)
+        total = sum(int(l.size) // self.num_clients_dev
+                    for l in jax.tree.leaves(f_params))
+        return jnp.zeros((self.num_clients_dev, total), jnp.float32)
+
+    def run_rounds(self, f_params, key, T: int, batches, codec_state=None):
         """Run T rounds as one compiled scan. ``batches`` leaves are
         [T, D, local_steps, ...]; returns (f_params, losses[T]) with the
-        loss buffer on device (no per-round host syncs)."""
+        loss buffer on device (no per-round host syncs).
+
+        With a *stateful* codec (error feedback) the return grows a third
+        element — the final residual — and ``codec_state`` seeds the scan
+        (zeros when None). Drivers that stage T in chunks (several
+        run_rounds calls per training run, e.g. ``launch.train``) MUST
+        thread it through, or every chunk boundary silently drops the
+        accumulated feedback mass."""
         T = int(T)
         got = jax.tree.leaves(batches)[0].shape[0]
         if got != T:
             raise ValueError(f"batches carry {got} rounds, expected T={T}")
+        if self._codec_stateful:
+            return self._run_jit(f_params, key, batches, codec_state)
         return self._run_jit(f_params, key, batches)

@@ -119,5 +119,5 @@ class DecentralizedGossip(Protocol):
                   ctx: Optional[RoundContext] = None) -> float:
         """Two pairwise phases, all pairs in parallel: each phase is an
         n=2 ring allreduce over a device-device link. No server term and no
-        dependence on P."""
-        return 2.0 * allreduce_time(p.model_bytes, 2, p.device_bw)
+        dependence on P. Prices codec-adjusted wire bytes."""
+        return 2.0 * allreduce_time(p.wire_bytes, 2, p.device_bw)

@@ -64,7 +64,7 @@ class TopologyAwareFedP2P(FedP2P):
                            P))
         sel = np.arange(P)
         ids = grid_cluster_assignment(topology, sel, L_int)
-        intra = max(cluster_comm_time(topology, sel[ids == c], p.model_bytes)
+        intra = max(cluster_comm_time(topology, sel[ids == c], p.wire_bytes)
                     for c in range(L_int))
-        server = (1.0 + p.alpha) * L_int * p.model_bytes / p.server_bw
+        server = (1.0 + p.alpha) * L_int * p.wire_bytes / p.server_bw
         return server + intra

@@ -1,0 +1,122 @@
+"""The flat-param packing seam (`kernels.ops.pack_tree`/`unpack_tree`):
+input-validation guards (ISSUE 4 satellite) + hypothesis round-trip
+properties over mixed-dtype pytrees, pinning that per-leaf dtypes survive
+the promoted-buffer round trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# guards
+# ---------------------------------------------------------------------------
+
+def test_pack_tree_empty_pytree_raises_clear_error():
+    with pytest.raises(ValueError, match="empty pytree"):
+        ops.pack_tree({})
+    with pytest.raises(ValueError, match="empty pytree"):
+        ops.pack_tree([])
+    with pytest.raises(ValueError, match="empty pytree"):
+        ops.pack_tree(None)
+
+
+def test_pack_tree_mismatched_leading_axis_raises():
+    with pytest.raises(ValueError, match="leading client axis"):
+        ops.pack_tree({"a": jnp.zeros((3, 2)), "b": jnp.zeros((4, 2))})
+
+
+def test_pack_tree_scalar_leaf_raises():
+    with pytest.raises(ValueError, match="scalar"):
+        ops.pack_tree({"a": jnp.zeros((3, 2)), "s": jnp.zeros(())})
+
+
+def test_pack_tree_valid_tree_still_packs():
+    tree = {"a": jnp.ones((3, 2)), "b": jnp.zeros((3, 4, 2))}
+    flat, spec = ops.pack_tree(tree)
+    assert flat.shape == (3, 2 + 8)
+    back = ops.unpack_tree(flat, spec)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis round-trip properties (skip cleanly without dev deps)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    _SETTINGS = settings(
+        deadline=None, max_examples=30,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # degrade, don't die, without dev deps
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    _DTYPES = [jnp.float32, jnp.bfloat16]
+
+    @st.composite
+    def _mixed_trees(draw):
+        """Random-depth dict pytrees of [N, ...] leaves mixing f32 and bf16
+        (the promoted buffer dtype is then f32 — the lossy direction for a
+        naive round trip)."""
+        n = draw(st.integers(1, 7))
+        num_leaves = draw(st.integers(1, 5))
+        tree = {}
+        for i in range(num_leaves):
+            rank = draw(st.integers(0, 2))
+            shape = (n,) + tuple(draw(st.lists(st.integers(1, 6),
+                                               min_size=rank, max_size=rank)))
+            dtype = draw(st.sampled_from(_DTYPES))
+            seed = draw(st.integers(0, 2 ** 31 - 1))
+            rng = np.random.default_rng(seed)
+            leaf = jnp.asarray(rng.normal(size=shape).astype(np.float32)
+                               ).astype(dtype)
+            if draw(st.booleans()):
+                tree[f"leaf{i}"] = leaf
+            else:
+                tree[f"nest{i}"] = {"w": leaf}
+        return tree
+
+    @_SETTINGS
+    @given(_mixed_trees())
+    def test_pack_unpack_roundtrip_preserves_dtypes_and_values(tree):
+        """pack -> promoted [N, sum(sizes)] buffer -> unpack is the exact
+        identity per leaf: shapes, dtypes (bf16 leaves come back bf16, NOT
+        the promoted f32), and bit-patterns."""
+        flat, spec = ops.pack_tree(tree)
+        n = jax.tree.leaves(tree)[0].shape[0]
+        total = sum(int(l.size) // n for l in jax.tree.leaves(tree))
+        assert flat.shape == (n, total)
+        back = ops.unpack_tree(flat, spec)
+        assert (jax.tree_util.tree_structure(back)
+                == jax.tree_util.tree_structure(tree))
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    @_SETTINGS
+    @given(st.integers(1, 6), st.integers(1, 24), st.integers(1, 24),
+           st.integers(0, 2 ** 31 - 1))
+    def test_pack_unpack_reduced_leading_axis(n, sa, sb, seed):
+        """unpack also handles reduced ([sum(sizes)]) buffers — the
+        fed_aggregate output shape."""
+        rng = np.random.default_rng(seed)
+        tree = {"a": jnp.asarray(rng.normal(size=(n, sa)).astype(np.float32)),
+                "b": jnp.asarray(rng.normal(size=(n, sb)).astype(np.float32)
+                                 ).astype(jnp.bfloat16)}
+        flat, spec = ops.pack_tree(tree)
+        red = ops.unpack_tree(flat[0], spec)
+        assert red["a"].shape == (sa,) and red["b"].shape == (sb,)
+        assert red["b"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(red["a"]),
+                                      np.asarray(tree["a"][0]))

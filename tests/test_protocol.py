@@ -13,7 +13,8 @@ from repro.core.aggregation import (
     cluster_models, cluster_then_global, weighted_average,
 )
 from repro.core.comm_model import (
-    CommParams, h_fedavg, h_fedp2p, min_h_fedp2p, optimal_L, speedup_R,
+    CommParams, clamped_optimal_L, h_fedavg, h_fedp2p, min_h_fedp2p,
+    optimal_L, speedup_R,
 )
 from repro.core.partition import random_partition, sample_participants
 from repro.core.straggler import straggler_mask
@@ -155,10 +156,17 @@ def test_optimal_L_minimizes(alpha, P, gamma):
 
 @given(st.floats(1.0, 16.0), st.integers(100, 5000), st.floats(50.0, 1000.0))
 def test_min_h_closed_form(alpha, P, gamma):
+    """min H_p2p == H_p2p at the [1, P]-clamped optimum; == the interior
+    closed form whenever L* is physical."""
     p = CommParams(model_bytes=1e8, server_bw=1e9, device_bw=1e9 / gamma,
                    alpha=alpha)
     np.testing.assert_allclose(min_h_fedp2p(p, P),
-                               h_fedp2p(p, P, optimal_L(p, P)), rtol=1e-9)
+                               h_fedp2p(p, P, clamped_optimal_L(p, P)),
+                               rtol=1e-9)
+    if 1.0 <= optimal_L(p, P) <= P:
+        np.testing.assert_allclose(min_h_fedp2p(p, P),
+                                   h_fedp2p(p, P, optimal_L(p, P)),
+                                   rtol=1e-9)
 
 
 @given(st.floats(1.0, 16.0), st.integers(100, 5000), st.floats(50.0, 1000.0))
