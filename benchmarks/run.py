@@ -24,8 +24,8 @@ def main(argv=None) -> None:
     quick = not args.full
 
     from benchmarks import (accuracy, comm_time, compression_sweep,
-                            kernel_bench, lq_sweep, roofline, stragglers,
-                            theory_bound, topology_gain)
+                            kernel_bench, lq_sweep, roofline, scale_sweep,
+                            stragglers, theory_bound, topology_gain)
     modules = {
         "accuracy": lambda: accuracy.run(quick=quick)[0],   # Table 1 + Fig 2
         "comm_time": lambda: comm_time.run(quick=quick),    # Fig 3
@@ -34,6 +34,8 @@ def main(argv=None) -> None:
         "theory_bound": lambda: theory_bound.run(quick=quick),  # §3.3
         "topology_gain": lambda: topology_gain.run(quick=quick),  # §5
         "kernels": lambda: kernel_bench.run(quick=quick),
+        # dense-vs-sparse mixing round time/memory vs client count D
+        "scale": lambda: scale_sweep.run(quick=quick),
         # accuracy-vs-bits frontier of the quantized-exchange codecs
         "compression": lambda: compression_sweep.run(quick=quick)[0],
         "roofline": lambda: roofline.run(quick=quick),      # deliverable (g)

@@ -1,0 +1,140 @@
+"""Scale sweep: per-round mixing wall-clock and peak temp memory vs client
+count D, dense [D, D] oracle vs structured-sparse MixingSpec path.
+
+This is the tracked evidence for the fast path's O(D²·n) -> O(D·n) claim:
+for every protocol with a structured spec it times ONE full mixing
+application (context -> operator -> flat [D, n] mix, compiled as one jit
+program, including the operator construction) on both paths at growing D,
+and reads the compiled program's temp-buffer footprint — the dense path
+materializes two [D, D] f32 matrices (128 MiB at D=4096), the sparse path
+O(D) index/weight vectors.
+
+Rows (``name,value,derived`` — the speedup row is the CI-tracked one):
+
+    scale/<proto>/D<D>/dense_round_us
+    scale/<proto>/D<D>/sparse_round_us
+    scale/<proto>/D<D>/speedup
+    scale/<proto>/D<D>/dense_temp_mib | sparse_temp_mib
+
+Quick mode sweeps D ∈ {64, 256, 1024}; ``--full`` adds D=4096 (the dense
+oracle at D=4096 is exactly the wall the sparse path removes — expect
+seconds per round there).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro import protocols
+from repro.config import FLConfig
+from repro.protocols import apply_spec_flat, make_context
+
+# protocols with a structured spec, one per spec family + the rank-1 server
+# forms (fedp2p_topo shares fedp2p's spec; it would only duplicate rows)
+SWEEP_PROTOCOLS = ("fedavg", "fedp2p", "gossip", "gossip_async")
+QUICK_DS = (64, 256, 1024)
+FULL_DS = (64, 256, 1024, 4096)
+# largest D whose DENSE oracle is even worth materializing per protocol:
+# gossip_async's dense form indexes a precomputed [R, D, D] matching stack —
+# O(D³) bytes (4.3 GiB at D=1024), the very wall the MatchingSpec removes —
+# so past this cap only the sparse path is measured.
+DENSE_MAX_D = {"gossip_async": 256}
+
+
+def _temp_mib(fn, *args) -> float:
+    try:
+        mem = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return float(getattr(mem, "temp_size_in_bytes", 0.0)) / 2 ** 20
+    except Exception:  # noqa: BLE001 — memory analysis is best-effort
+        return 0.0
+
+
+def sweep_one(name: str, D: int, n: int, *, iters: int = 3):
+    """(dense_us, sparse_us, dense_mib, sparse_mib) for one (protocol, D)."""
+    proto = protocols.get(name)
+    fl = FLConfig(num_clusters=min(8, D), participation=D)
+    cids = jnp.asarray(proto.mesh_cluster_ids(D, fl))
+    L = int(np.asarray(cids).max()) + 1
+    rng = np.random.default_rng(D)
+    survive = jnp.asarray((rng.random(D) > 0.1).astype(np.float32))
+    counts = jnp.asarray(rng.uniform(0.5, 5.0, D).astype(np.float32))
+
+    def ctx_of(key):
+        return make_context(key=key, survive=survive, counts=counts,
+                            cluster_ids=cids, num_clusters=L,
+                            do_global_sync=True)
+
+    def dense_fn(xn, xo, key):
+        M_new, M_old = proto.mixing_matrix(ctx_of(key))
+        return (M_new @ xn + M_old @ xo).astype(xn.dtype)
+
+    def sparse_fn(xn, xo, key):
+        return apply_spec_flat(proto.mixing_spec(ctx_of(key)), xn, xo)
+
+    xn = jnp.asarray(rng.normal(size=(D, n)).astype(np.float32))
+    xo = jnp.asarray(rng.normal(size=(D, n)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    with_dense = D <= DENSE_MAX_D.get(name, FULL_DS[-1])
+    dense_us = (timed(jax.jit(dense_fn), xn, xo, key, iters=iters)
+                if with_dense else 0.0)
+    sparse_us = timed(jax.jit(sparse_fn), xn, xo, key, iters=iters)
+    dense_mib = _temp_mib(dense_fn, xn, xo, key) if with_dense else 0.0
+    return dense_us, sparse_us, dense_mib, _temp_mib(sparse_fn, xn, xo, key)
+
+
+def run(quick: bool = True, n: int | None = None, verbose: bool = False):
+    import sys
+    import time
+
+    ds = QUICK_DS if quick else FULL_DS
+    n = n or (2048 if quick else 4096)
+    rows = []
+    for name in SWEEP_PROTOCOLS:
+        for D in ds:
+            t0 = time.time()
+            iters = 1 if D >= 4096 else 3
+            dense_us, sparse_us, dense_mib, sparse_mib = sweep_one(
+                name, D, n, iters=iters)
+            tag = f"scale/{name}/D{D}"
+            if dense_us > 0:
+                rows.append((f"{tag}/dense_round_us", dense_us,
+                             f"[D,D]@[D,{n}] oracle, ctx->matrix->mix"))
+            else:
+                rows.append((f"{tag}/dense_skipped", 1.0,
+                             "dense oracle infeasible here: O(D^3) "
+                             "matching-matrix stack"))
+            rows.append((f"{tag}/sparse_round_us", sparse_us,
+                         "MixingSpec fast path, same round"))
+            if dense_us > 0:
+                rows.append((f"{tag}/speedup",
+                             dense_us / max(sparse_us, 1e-9),
+                             "dense/sparse round-time ratio"))
+                rows.append((f"{tag}/dense_temp_mib", dense_mib,
+                             "compiled temp buffers"))
+            rows.append((f"{tag}/sparse_temp_mib", sparse_mib,
+                         "compiled temp buffers"))
+            if verbose:
+                print(f"# {tag}: dense={dense_us:.0f}us "
+                      f"sparse={sparse_us:.0f}us ({time.time() - t0:.1f}s)",
+                      file=sys.stderr)
+    return rows
+
+
+def main():
+    import argparse
+
+    from benchmarks.common import print_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--n", type=int, default=None,
+                    help="packed params per client (flat row width)")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, n=args.n, verbose=True)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

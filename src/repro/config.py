@@ -223,6 +223,12 @@ class FLConfig:
     # the lossy wire format every exchanged model update goes through.
     # "none" keeps rounds bit-for-bit the uncompressed program.
     codec: str = "none"
+    # which mixing lowering the engines run (dense | sparse | auto):
+    # "dense" = the [D, D] mixing-matrix oracle (bit-for-bit the pre-spec
+    # program), "sparse" = the protocol's structured MixingSpec kernels
+    # (O(D·n) per round, raises for spec-less protocols), "auto" = sparse
+    # exactly where a spec exists.
+    mix_path: str = "auto"
 
 
 # ---------------------------------------------------------------------------

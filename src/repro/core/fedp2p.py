@@ -46,7 +46,8 @@ def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
                          counts=None,
                          out_shardings=None,
                          mesh_info=None,
-                         codec=None) -> Callable:
+                         codec=None,
+                         mix_path=None) -> Callable:
     """Returns round_fn(f_params, batches, survive, key,
     do_global_sync=True) -> (f_params, mean_loss).
 
@@ -60,12 +61,16 @@ def make_federated_round(model: Model, fl: FLConfig, num_clients_dev: int,
     protocols' weighted psums. ``codec`` is any ``repro.compression``
     registry name/Codec (default: fl.codec) — the lossy wire every
     exchanged update goes through (quantize/dequantize wrapped around the
-    grouped psums on the mesh).
+    grouped psums on the mesh). ``mix_path`` (dense | sparse | auto;
+    default fl.mix_path) picks the mixing lowering of the no-mesh
+    fallback — the protocol's structured MixingSpec kernels vs the dense
+    [D, D] oracle; with ``mesh_info`` the grouped psums already realize
+    the structured traffic.
     """
     engine = MeshEngine(model, fl, num_clients_dev, local_steps,
                         algorithm=algorithm, counts=counts, remat=remat,
                         out_shardings=out_shardings, mesh_info=mesh_info,
-                        codec=codec)
+                        codec=codec, mix_path=mix_path)
     return engine.round_fn
 
 

@@ -56,12 +56,17 @@ class History:
 class Simulator:
     def __init__(self, net: PaperNetConfig, data: FederatedDataset,
                  fl: FLConfig, topology: Optional[Topology] = None, *,
-                 mix_use_pallas: Optional[bool] = None):
+                 mix_use_pallas: Optional[bool] = None,
+                 mix_path: Optional[str] = None):
         self.net, self.fl = net, fl
         self.topology = topology
         #: forwarded to every DenseEngine (None = auto backend; False forces
         #: the jnp mixing oracle, e.g. to A/B against the kernel on TPU)
         self.mix_use_pallas = mix_use_pallas
+        #: default mixing lowering for every engine (dense | sparse | auto;
+        #: None = ``fl.mix_path``) — "auto" runs each protocol's structured
+        #: MixingSpec fast path whenever one exists
+        self.mix_path = mix_path or fl.mix_path
         self.data_dev = {
             "x": jnp.asarray(data.x), "y": jnp.asarray(data.y),
             "mask": jnp.asarray(data.mask),
@@ -74,26 +79,31 @@ class Simulator:
     def init_params(self, seed: int = 0):
         return init_paper_net(jax.random.PRNGKey(seed), self.net)
 
-    def engine(self, algorithm: str, codec=None) -> DenseEngine:
+    def engine(self, algorithm: str, codec=None,
+               mix_path: Optional[str] = None) -> DenseEngine:
         """Registry dispatch — unknown names raise ValueError listing the
         registered protocols (never a silent FedAvg fallback). ``codec``
         is any ``repro.compression`` name/Codec (default: ``fl.codec``);
-        engines are cached per (protocol, codec) pair."""
+        ``mix_path`` selects the mixing lowering (default: the simulator's
+        ``mix_path``); engines are cached per (protocol, codec, mix_path)
+        triple."""
         from repro import compression
         proto = protocols.resolve(algorithm,
                                   topology_aware=self.fl.topology_aware)
         codec = compression.as_codec(
             codec if codec is not None else self.fl.codec)
+        mix_path = mix_path or self.mix_path
         # key on the (frozen, hashable) codec instance, not its name —
         # Int8Codec(chunk=64) must never reuse a chunk=256 engine
-        cache_key = (proto.name, codec)
+        cache_key = (proto.name, codec, mix_path)
         if cache_key not in self._engines:
             if proto.needs_topology and self.topology is None:
                 self.topology = make_topology(self.fl.num_clients,
                                               seed=self.fl.seed)
             self._engines[cache_key] = DenseEngine(
                 self.net, self.data_dev, self.fl, proto, self.topology,
-                mix_use_pallas=self.mix_use_pallas, codec=codec)
+                mix_use_pallas=self.mix_use_pallas, codec=codec,
+                mix_path=mix_path)
         return self._engines[cache_key]
 
     @property
@@ -104,17 +114,17 @@ class Simulator:
         because runs used a codec override."""
         proto = protocols.resolve(self.fl.algorithm,
                                   topology_aware=self.fl.topology_aware)
-        for (pname, _), eng in self._engines.items():
+        for (pname, *_), eng in self._engines.items():
             if pname == proto.name:
                 return eng.evaluate
         return self.engine(self.fl.algorithm).evaluate
 
     def run(self, rounds: int = 0, algorithm: str = "", seed: int = 0,
             eval_every: int = 1, verbose: bool = False,
-            codec=None) -> History:
+            codec=None, mix_path: Optional[str] = None) -> History:
         rounds = rounds or self.fl.rounds
         algorithm = algorithm or self.fl.algorithm
-        engine = self.engine(algorithm, codec=codec)
+        engine = self.engine(algorithm, codec=codec, mix_path=mix_path)
         params = self.init_params(seed)
         key = jax.random.PRNGKey(seed + 1)
         _, metrics = engine.run_rounds(params, key, rounds,

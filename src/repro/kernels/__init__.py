@@ -4,5 +4,7 @@
 #
 # Current kernels: fed_aggregate (weighted client reduction),
 # fed_mix (fused dense mixing O = M_new@X_new + M_old@X_old, behind
-# Protocol.apply_mixing), flash_attention, ssd_scan. Dispatch +
+# Protocol.apply_mixing), fed_mix_q (int8 wire contraction),
+# fed_mix_sparse (structured MixingSpec fast path: segment-reduce +
+# permutation-gather, O(D·n)), flash_attention, ssd_scan. Dispatch +
 # flat-param packing live in ops.py; jnp oracles in ref.py.

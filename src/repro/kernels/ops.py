@@ -24,6 +24,10 @@ from repro.kernels.backend import on_tpu  # noqa: F401 — re-exported
 from repro.kernels.fed_aggregate import fed_aggregate as _fed_aggregate_pallas
 from repro.kernels.fed_mix import fed_mix as _fed_mix_pallas
 from repro.kernels.fed_mix_q import fed_mix_q as _fed_mix_q_pallas
+from repro.kernels.fed_mix_sparse import (
+    fed_mix_matching as _fed_mix_matching_pallas,
+    fed_mix_segment as _fed_mix_segment_pallas,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
@@ -69,6 +73,23 @@ def pack_tree(tree) -> Tuple[jnp.ndarray, TreeSpec]:
                     tuple(l.dtype for l in leaves),
                     tuple(int(l[0].size) for l in leaves))
     return jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1), spec
+
+
+def mean_packed(flat: jnp.ndarray, spec: TreeSpec) -> jnp.ndarray:
+    """Mean over the leading (client) axis of a packed [N, sum(sizes)]
+    buffer, RESPECTING per-leaf dtypes: each leaf's columns are reduced in
+    that leaf's own dtype (exactly what ``tree.map(mean, unpack_tree(...))``
+    computes — a bf16 leaf accumulates in bf16, not in the promoted buffer
+    dtype) and the result is re-promoted to the buffer dtype. Uniform
+    trees take the single whole-buffer reduction fast path."""
+    if all(dt == flat.dtype for dt in spec.dtypes):
+        return jnp.mean(flat, axis=0)
+    outs, off = [], 0
+    for dtype, sz in zip(spec.dtypes, spec.sizes):
+        seg = flat[:, off:off + sz].astype(dtype)
+        outs.append(jnp.mean(seg, axis=0).astype(flat.dtype))
+        off += sz
+    return jnp.concatenate(outs)
 
 
 def unpack_tree(flat: jnp.ndarray, spec: TreeSpec):
@@ -127,43 +148,46 @@ def fed_mix_q(m_new, m_old, q_new, scales, x_old, *, chunk: int = 256,
                              out_dtype=out_dtype, interpret=interpret)
 
 
-def fed_mix_tree(m_new, m_old, f_new, f_old, *, codec=None, codec_state=None,
-                 key=None, use_pallas: bool | None = None,
-                 interpret: bool | None = None):
-    """Apply the dense mixing matrices over [D, ...] pytrees through ONE
-    fused flat pass: pack both trees once, run ``fed_mix``, unpack.
+def fed_mix_segment(cluster_ids, w_new, w_old, x_new, x_old, *,
+                    num_segments: int, use_pallas: bool | None = None,
+                    interpret: bool | None = None):
+    """Structured-sparse mixing for cluster-segment ``MixingSpec``s on
+    [D, P] flat params: per-cluster sums of the weighted rows gathered back
+    to member rows — O(D·P) FLOPs vs the dense path's O(D²·P), and no
+    [D, D] operator is ever materialized."""
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.fed_mix_segment_ref(cluster_ids, w_new, w_old,
+                                       x_new, x_old,
+                                       num_segments=num_segments)
+    return _fed_mix_segment_pallas(cluster_ids, w_new, w_old, x_new, x_old,
+                                   num_segments=num_segments,
+                                   interpret=interpret)
 
-    ``codec`` (a ``repro.compression`` name or Codec) puts the round DELTA
-    — ``flat_new - flat_old``, what the clients actually upload against the
-    round-start state the receivers hold — through the lossy exchange at
-    the packing seam: quantize right after ``pack_tree``, dequantize before
-    ``unpack_tree``; f_old stays exact. The int8 codec never materializes
-    the dequantized reconstruction: the fused ``fed_mix_q`` kernel
-    contracts the int8 wire record directly, folding the base back in as
-    ``M_new @ dq(Q) + (M_new + M_old) @ X_old`` (= ``M_new @ (X_old + dq) +
-    M_old @ X_old``). When ``codec`` is given the call returns ``(tree,
-    new_codec_state)`` — ``codec_state`` is the [D, sum(sizes)] f32
-    error-feedback residual of stateful codecs (auto-initialized to zeros
-    when None) and passes through untouched for stateless ones.
-    """
+
+def fed_mix_matching(perms, survive, x_new, x_old, *,
+                     use_pallas: bool | None = None,
+                     interpret: bool | None = None):
+    """Structured-sparse mixing for permutation-form ``MixingSpec``s on
+    [D, P] flat params: straggler-substitute once, then average each row
+    with its stage partner — O(S·D·P) work, O(D) index memory."""
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.fed_mix_matching_ref(perms, survive, x_new, x_old)
+    return _fed_mix_matching_pallas(perms, survive, x_new, x_old,
+                                    interpret=interpret)
+
+
+def wire_flat(codec, flat_new, flat_old, codec_state=None, *, key=None):
+    """THE flat-buffer quantized-exchange step, shared by the dense
+    (``fed_mix_flat``) and structured (``protocols.spec.apply_spec_flat``)
+    mixing paths so their wire semantics can never diverge: what crosses
+    the wire is the round DELTA ``flat_new - flat_old`` against the
+    round-start base, with the error-feedback residual of stateful codecs
+    auto-initialized to zeros and folded in. Returns ``(enc, d_shape,
+    base, new_state)`` — the wire record, the shape ``decode`` needs, the
+    f32 base, and the threaded codec state."""
     from repro import compression
-
-    flat_new, spec = pack_tree(f_new)
-    flat_old, spec_old = pack_tree(f_old)
-    if spec_old.treedef != spec.treedef or spec_old.shapes != spec.shapes:
-        # two mismatched trees can still flatten to the same [D, P] buffer
-        # and would mix misaligned columns silently
-        raise ValueError(
-            f"fed_mix_tree: f_new/f_old tree structures differ "
-            f"(new={spec.treedef} shapes={spec.shapes}, "
-            f"old={spec_old.treedef} shapes={spec_old.shapes})")
-    codec_given = codec is not None
-    codec = None if not codec_given else compression.active(codec)
-    if codec is None:
-        out = fed_mix(m_new, m_old, flat_new, flat_old,
-                      use_pallas=use_pallas, interpret=interpret)
-        tree = unpack_tree(out, spec)
-        return (tree, codec_state) if codec_given else tree
 
     base = flat_old.astype(jnp.float32)
     d = flat_new.astype(jnp.float32) - base          # the uploaded delta
@@ -171,7 +195,39 @@ def fed_mix_tree(m_new, m_old, f_new, f_old, *, codec=None, codec_state=None,
         codec_state = jnp.zeros(d.shape, jnp.float32)
     enc, d_shape, new_res = compression.feedback_encode(
         codec, d, codec_state, key=key)
-    new_state = new_res if codec.stateful else codec_state
+    return enc, d_shape, base, (new_res if codec.stateful else codec_state)
+
+
+def fed_mix_flat(m_new, m_old, flat_new, flat_old, *, codec=None,
+                 codec_state=None, key=None, use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+    """The dense mixing pass on already-packed [D, sum(sizes)] buffers —
+    the seam the packed-state ``DenseEngine`` carry drives directly, and
+    the flat core of ``fed_mix_tree``.
+
+    ``codec`` (a ``repro.compression`` name or Codec) puts the round DELTA
+    — ``flat_new - flat_old``, what the clients actually upload against the
+    round-start state the receivers hold — through the lossy exchange;
+    flat_old stays exact. The int8 codec never materializes the dequantized
+    reconstruction: the fused ``fed_mix_q`` kernel contracts the int8 wire
+    record directly, folding the base back in as ``M_new @ dq(Q) +
+    (M_new + M_old) @ X_old`` (= ``M_new @ (X_old + dq) + M_old @ X_old``).
+    When ``codec`` is given the call returns ``(flat, new_codec_state)`` —
+    ``codec_state`` is the [D, sum(sizes)] f32 error-feedback residual of
+    stateful codecs (auto-initialized to zeros when None) and passes
+    through untouched for stateless ones.
+    """
+    from repro import compression
+
+    codec_given = codec is not None
+    codec = None if not codec_given else compression.active(codec)
+    if codec is None:
+        out = fed_mix(m_new, m_old, flat_new, flat_old,
+                      use_pallas=use_pallas, interpret=interpret)
+        return (out, codec_state) if codec_given else out
+
+    enc, d_shape, base, new_state = wire_flat(codec, flat_new, flat_old,
+                                              codec_state, key=key)
     from repro.compression import Int8Codec
     if isinstance(codec, Int8Codec):
         # M_new @ dq(Q) + (M_new + M_old) @ X_old == M_new @ (X_old + dq)
@@ -184,6 +240,40 @@ def fed_mix_tree(m_new, m_old, f_new, f_old, *, codec=None, codec_state=None,
         x_hat = (base + codec.decode(enc, d_shape)).astype(flat_new.dtype)
         out = fed_mix(m_new, m_old, x_hat, flat_old,
                       use_pallas=use_pallas, interpret=interpret)
+    return out, new_state
+
+
+def pack_tree_pair(f_new, f_old, caller: str = "fed_mix_tree"):
+    """Pack two same-structure [D, ...] pytrees into flat buffers with ONE
+    shared TreeSpec; mismatched structures raise instead of silently mixing
+    misaligned columns (two different trees can flatten to the same [D, P]
+    buffer)."""
+    flat_new, spec = pack_tree(f_new)
+    flat_old, spec_old = pack_tree(f_old)
+    if spec_old.treedef != spec.treedef or spec_old.shapes != spec.shapes:
+        raise ValueError(
+            f"{caller}: f_new/f_old tree structures differ "
+            f"(new={spec.treedef} shapes={spec.shapes}, "
+            f"old={spec_old.treedef} shapes={spec_old.shapes})")
+    return flat_new, flat_old, spec
+
+
+def fed_mix_tree(m_new, m_old, f_new, f_old, *, codec=None, codec_state=None,
+                 key=None, use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+    """Apply the dense mixing matrices over [D, ...] pytrees through ONE
+    fused flat pass: pack both trees once, run ``fed_mix_flat``, unpack.
+    See ``fed_mix_flat`` for the codec (quantized-exchange) semantics —
+    with a codec the call returns ``(tree, new_codec_state)``."""
+    flat_new, flat_old, spec = pack_tree_pair(f_new, f_old)
+    if codec is None:
+        out = fed_mix_flat(m_new, m_old, flat_new, flat_old,
+                           use_pallas=use_pallas, interpret=interpret)
+        return unpack_tree(out, spec)
+    out, new_state = fed_mix_flat(m_new, m_old, flat_new, flat_old,
+                                  codec=codec, codec_state=codec_state,
+                                  key=key, use_pallas=use_pallas,
+                                  interpret=interpret)
     return unpack_tree(out, spec), new_state
 
 

@@ -28,6 +28,48 @@ def fed_mix_ref(m_new: jnp.ndarray, m_old: jnp.ndarray,
     return out.astype(x_new.dtype)
 
 
+def fed_mix_segment_ref(cluster_ids: jnp.ndarray, w_new: jnp.ndarray,
+                        w_old: jnp.ndarray, x_new: jnp.ndarray,
+                        x_old: jnp.ndarray, *, num_segments: int
+                        ) -> jnp.ndarray:
+    """cluster_ids: [D] int32; w_new, w_old: [D]; x_new, x_old: [D, P];
+    num_segments: static L -> [D, P].
+
+    The cluster-segment mixing operator in O(D·P) FLOPs: per-cluster sums of
+    the weighted rows, gathered back to every member row —
+
+        out_i = sum_{j: c(j)=c(i)} (w_new_j x_new_j + w_old_j x_old_j)
+
+    — the structured form of any block-diagonal ``MixingSpec`` whose rows
+    agree within a cluster (FedAvg, FedP2P; L=1 is the global rank-1 term).
+    f32 accumulate, cast back to x_new.dtype.
+    """
+    y = (w_new.astype(jnp.float32)[:, None] * x_new.astype(jnp.float32)
+         + w_old.astype(jnp.float32)[:, None] * x_old.astype(jnp.float32))
+    seg = jax.ops.segment_sum(y, cluster_ids, num_segments=num_segments)
+    return jnp.take(seg, cluster_ids, axis=0).astype(x_new.dtype)
+
+
+def fed_mix_matching_ref(perms: jnp.ndarray, survive: jnp.ndarray,
+                         x_new: jnp.ndarray, x_old: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """perms: [S, D] int32 stage partner indices (perm[i]=i for byes);
+    survive: [D] 0/1; x_new, x_old: [D, P] -> [D, P].
+
+    The pairwise-matching mixing operator in O(S·D·P) work and O(D) index
+    memory: stragglers contribute their OLD row (their update "never
+    arrived"), then each stage averages every row with its partner row —
+    the structured form of gossip's per-round doubly stochastic operator
+    (S=2 ring phases; S=1 random matchings). f32 accumulate, cast back.
+    """
+    s = survive.astype(jnp.float32)[:, None]
+    eff = (s * x_new.astype(jnp.float32)
+           + (1.0 - s) * x_old.astype(jnp.float32))
+    for i in range(perms.shape[0]):
+        eff = 0.5 * (eff + jnp.take(eff, perms[i], axis=0))
+    return eff.astype(x_new.dtype)
+
+
 def fed_mix_q_ref(m_new: jnp.ndarray, m_old: jnp.ndarray,
                   q_new: jnp.ndarray, scales: jnp.ndarray,
                   x_old: jnp.ndarray, *, chunk: int = 256,

@@ -110,6 +110,7 @@ def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
                     multi_pod: bool = False, local_steps: int = 4,
                     client_batch: int = 2, seq_len: int = 4096,
                     num_clusters: int = 4, codec: str = "none",
+                    mix_path: str = "dense",
                     verbose: bool = True):
     """Lower + compile one federated round of ANY registered protocol
     (``repro.protocols``) on the production mesh: one client group per
@@ -118,7 +119,11 @@ def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
     roofline study; fedavg / gossip / gossip_async price the registry's
     other traffic patterns on identical hardware. ``codec`` lowers the
     quantized-exchange wire (``repro.compression``) into the same program
-    and stamps the artifact with the codec-adjusted analytic wire bytes."""
+    and stamps the artifact with the codec-adjusted analytic wire bytes.
+    ``mix_path`` != "dense" additionally lowers the protocol's
+    structured-sparse ``mixing_spec`` fast path at production (D,
+    n_params) scale, verifies the lowered program materializes no [D, D]
+    operator, and stamps its analytic cost into the artifact."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro import compression, protocols
@@ -151,7 +156,7 @@ def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
     round_fn = make_federated_round(model, fl, D, local_steps,
                                     algorithm=algorithm,
                                     out_shardings=out_specs, mesh_info=info,
-                                    codec=codec_obj)
+                                    codec=codec_obj, mix_path=mix_path)
     bshape = (D, local_steps, client_batch, seq_len)
     batches = {"tokens": sds(bshape, jnp.int32, P(dspec, None, None, None)),
                "labels": sds(bshape, jnp.int32, P(dspec, None, None, None))}
@@ -184,12 +189,15 @@ def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
     cp = tpu_comm_params(4.0 * n_params).with_codec(codec_obj)
     result.update({"ok": True, "protocol": algorithm,
                    "codec": codec_obj.name,
+                   "mix_path": mix_path,
                    "bits_per_param": codec_obj.bits_per_param(),
                    "wire_bytes_per_client": cp.wire_bytes,
                    "comm_model_h_s": proto.comm_time(cp, D),
                    "compile_s": round(time.time() - t0, 1),
                    "arg_bytes_per_device": float(mem.argument_size_in_bytes),
                    "temp_bytes_per_device": float(mem.temp_size_in_bytes)})
+    if mix_path != "dense":
+        result.update(_lower_sparse_mix(proto, fl, D, n_params))
     if verbose:
         print(f"[{arch}+{algorithm} x {result['mesh']}] "
               f"mem={result['peak_mem_per_device_gib']:.2f}GiB/dev "
@@ -197,6 +205,54 @@ def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
               f"coll={report.collective_s:.4f}s dom={report.dominant} "
               f"useful={report.useful_flops_ratio:.2f}")
     return result
+
+
+def _lower_sparse_mix(proto, fl, D: int, n_params: int) -> dict:
+    """Lower the protocol's structured-sparse mixing fast path at
+    production scale — flat [D, n_params] buffers through the
+    ``mixing_spec`` kernels — and stamp (a) that the lowered program
+    materializes NO [D, D] operator (the O(D²) dense matrix is gone from
+    the jaxpr, not just unexecuted) and (b) its analytic FLOP/byte cost
+    next to the dense oracle's for the roofline artifact."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.protocols import apply_spec_flat, make_context
+    from repro.protocols.spec import jaxpr_materializes_shape
+
+    ids = proto.mesh_cluster_ids(D, fl)
+
+    def ctx_of(key):
+        return make_context(
+            key=key, survive=jnp.ones((D,), jnp.float32),
+            counts=jnp.ones((D,), jnp.float32),
+            cluster_ids=jnp.asarray(ids),
+            num_clusters=int(np.asarray(ids).max()) + 1,
+            do_global_sync=True)
+
+    if proto.mixing_spec(ctx_of(jax.random.PRNGKey(0))) is None:
+        return {"mix_path_lowered": "dense",
+                "sparse_mix_available": False}
+
+    def sparse_mix(flat_new, flat_old, key):
+        return apply_spec_flat(proto.mixing_spec(ctx_of(key)),
+                               flat_new, flat_old)
+
+    sds = jax.ShapeDtypeStruct((D, n_params), jnp.float32)
+    key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    jaxpr = jax.make_jaxpr(sparse_mix)(sds, sds, key_sds)
+    return {"mix_path_lowered": "sparse",
+            "sparse_mix_available": True,
+            "sparse_mix_no_dense_matrix":
+                not jaxpr_materializes_shape(jaxpr, (D, D)),
+            # analytic per-round mixing cost (the jaxpr cost model does not
+            # price segment/gather ops): weighted combine + segment reduce
+            # + gather-broadcast ~ O(D·n), vs the dense oracle's two
+            # [D, D] @ [D, n] contractions and its [D, D] f32 operands
+            "sparse_mix_flops": 6.0 * D * n_params,
+            "sparse_mix_bytes": 3.0 * 4.0 * D * n_params,
+            "dense_mix_flops": 4.0 * D * D * n_params,
+            "dense_mix_matrix_bytes": 2.0 * 4.0 * D * D}
 
 
 def dryrun_fedp2p(arch: str, **kwargs):
@@ -230,6 +286,13 @@ def main(argv=None):
     ap.add_argument("--codec", default="none", metavar="NAME",
                     help="repro.compression codec lowered into the "
                          "federated round (--protocol runs only)")
+    ap.add_argument("--mix-path", default="dense", dest="mix_path",
+                    choices=("dense", "sparse", "auto"),
+                    help="mixing lowering stamped into the round; 'sparse' "
+                         "also lowers the structured MixingSpec fast path "
+                         "at production (D, n_params) scale and verifies "
+                         "it materializes no [D, D] operator "
+                         "(--protocol runs only)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -247,7 +310,8 @@ def main(argv=None):
                 try:
                     results.append(dryrun_protocol(args.arch or "qwen2-1.5b",
                                                    algo, multi_pod=multi,
-                                                   codec=args.codec))
+                                                   codec=args.codec,
+                                                   mix_path=args.mix_path))
                 except Exception as e:  # noqa: BLE001 — report all failures
                     traceback.print_exc()
                     failures.append((algo, mesh_name, repr(e)))

@@ -24,6 +24,9 @@ from repro.protocols.base import (  # noqa: F401
     Protocol, get, names, register, resolve, unregister,
 )
 from repro.protocols.context import RoundContext, make_context  # noqa: F401
+from repro.protocols.spec import (  # noqa: F401
+    MatchingSpec, MixingSpec, SegmentSpec, apply_spec_flat, apply_spec_tree,
+)
 from repro.protocols.async_gossip import AsyncGossip
 from repro.protocols.engine import DenseEngine, MeshEngine  # noqa: F401
 from repro.protocols.fedavg import FedAvg
@@ -40,6 +43,8 @@ register(AsyncGossip())
 __all__ = [
     "Protocol", "register", "unregister", "get", "names", "resolve",
     "RoundContext", "make_context", "DenseEngine", "MeshEngine",
+    "MixingSpec", "SegmentSpec", "MatchingSpec", "apply_spec_flat",
+    "apply_spec_tree",
     "FedAvg", "FedP2P", "DecentralizedGossip", "TopologyAwareFedP2P",
     "AsyncGossip",
 ]

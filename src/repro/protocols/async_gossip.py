@@ -62,6 +62,37 @@ def round_robin_matchings(D: int) -> tuple:
 
 
 @functools.lru_cache(maxsize=None)
+def matching_perm_stack(D: int) -> np.ndarray:
+    """[R, D] partner-map stack: row r is the r-th round-robin matching as
+    an O(D) permutation (perm[i] = i's partner; itself for the bye) — the
+    structured form the sparse mixing path indexes instead of the O(R·D²)
+    matrix stack.
+
+    Computed closed-form from the circle method (node a < n-1 partners
+    b = 2r - a mod n-1, the r-th circle node partners the fixed node n-1)
+    rather than via ``round_robin_matchings`` — whose lru-cached tuple
+    structure holds ~8M Python objects (>1 GiB, seconds to build) at the
+    D=4096 scale this path exists for. Equality with the tuple form is
+    pinned by tests/test_mixing_spec.py."""
+    if D <= 1:
+        return np.zeros((1, 1), np.int32) if D == 1 else \
+            np.zeros((0, 0), np.int32)
+    n = D if D % 2 == 0 else D + 1      # pad odd D with a dummy node
+    R = n - 1
+    r = np.arange(R)[:, None]
+    a = np.arange(n - 1)[None, :]
+    b = (2 * r - a) % (n - 1)           # circle partner of node a, round r
+    b = np.where(a == r, n - 1, b)      # node r partners the fixed node
+    perms = np.concatenate([b, r], axis=1)  # fixed node n-1 partners r
+    if n != D:                          # odd D: dummy-partner -> bye (self)
+        perms = perms[:, :D]
+        bye = perms == D
+        perms = np.where(bye, np.broadcast_to(np.arange(D), perms.shape),
+                         perms)
+    return perms.astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
 def matching_matrix_stack(D: int) -> np.ndarray:
     """[R, D, D] stack: entry r is the symmetric doubly stochastic averaging
     matrix of the r-th round-robin matching."""
@@ -103,6 +134,19 @@ class AsyncGossip(Protocol):
                 "(make_context(key=...)), or the matching would silently "
                 "repeat every round")
         return jax.random.randint(ctx.key, (), 0, num_matchings)
+
+    def mixing_spec(self, ctx: RoundContext):
+        """Permutation structure: ONE partner map, selected from the
+        [R, D] round-robin stack by the same key-derived draw the dense
+        oracle uses — O(D) index memory per round instead of the [R, D, D]
+        matrix stack. ``ctx.counts``/``ctx.do_global_sync`` ignored as in
+        ``mixing_matrix``."""
+        from repro.protocols.spec import MatchingSpec
+        D = int(ctx.survive.shape[0])
+        stack = jnp.asarray(matching_perm_stack(D))
+        r = self._draw(ctx, stack.shape[0])
+        return MatchingSpec(perms=jnp.take(stack, r, axis=0)[None],
+                            survive=ctx.survive)
 
     def mixing_matrix(self, ctx: RoundContext):
         # ctx.counts ignored (pairwise exchanges are plain means);

@@ -113,6 +113,19 @@ class Protocol:
         """
         raise NotImplementedError
 
+    def mixing_spec(self, ctx: RoundContext):
+        """The structured form of ``mixing_matrix`` — a ``SegmentSpec`` /
+        ``MatchingSpec`` pytree (``protocols.spec``) when this protocol's
+        operator has O(D) structure, else ``None`` (dense-only protocols).
+
+        Contract: ``mixing_spec(ctx).to_dense()`` must reproduce
+        ``mixing_matrix(ctx)`` exactly (pinned per protocol by
+        ``tests/test_mixing_spec.py``), and the structured kernels behind
+        ``apply_mixing(spec=...)`` must match the dense path round-for-
+        round. Engines with ``mix_path='auto'`` take this fast path
+        whenever it exists — O(D·P) per round instead of O(D²·P)."""
+        return None
+
     # ------------------------------------------------------------------
     # aggregation semantics — hierarchical mesh lowering
     # ------------------------------------------------------------------
@@ -142,24 +155,38 @@ class Protocol:
     # ------------------------------------------------------------------
     @staticmethod
     def apply_mixing(M_new: jnp.ndarray, M_old: jnp.ndarray, f_new, f_old, *,
-                     codec=None, codec_state=None, key=None,
+                     spec=None, codec=None, codec_state=None, key=None,
                      use_pallas: Optional[bool] = None,
                      interpret: Optional[bool] = None):
-        """Apply the dense mixing matrices over [D, ...] pytrees as ONE fused
-        flat pass: both trees are packed once into [D, sum(sizes)] buffers and
-        ``kernels.ops.fed_mix`` computes M_new @ X_new + M_old @ X_old in a
-        single kernel (Pallas on TPU, interpret under ``use_pallas=True`` on
-        CPU, jnp oracle otherwise) with f32 accumulation, then the result is
-        unpacked back to the leaf shapes/dtypes.
+        """Apply one round of mixing over [D, ...] pytrees as ONE fused
+        flat pass: both trees are packed once into [D, sum(sizes)] buffers,
+        the flat operator runs, and the result is unpacked back to the leaf
+        shapes/dtypes.
+
+        The flat operator is either the dense contraction
+        ``M_new @ X_new + M_old @ X_old`` (``kernels.ops.fed_mix`` —
+        Pallas on TPU, interpret under ``use_pallas=True`` on CPU, jnp
+        oracle otherwise, f32 accumulation) or — when ``spec`` (a
+        ``protocols.spec`` MixingSpec from ``mixing_spec(ctx)``) is given —
+        the structured-sparse fast path (``kernels/fed_mix_sparse``):
+        O(D·P) segment-reduce / permutation-gather kernels that never
+        materialize a [D, D] operator (``M_new``/``M_old`` may be ``None``
+        then).
 
         ``codec`` (a ``repro.compression`` name or Codec) puts the round
         DELTA — ``f_new - f_old``, what the clients upload against the
         round-start state the receivers hold — through the lossy wire at
-        the packing seam; the int8 codec runs the fused ``fed_mix_q``
-        kernel which dequantizes wire tiles inline in the MXU loop. With a
-        codec the call returns ``(tree, new_codec_state)`` (error-feedback
-        residual for stateful codecs, pass-through otherwise); ``key``
-        seeds stochastic rounding."""
+        the packing seam; on the dense path the int8 codec runs the fused
+        ``fed_mix_q`` kernel which dequantizes wire tiles inline in the
+        MXU loop. With a codec the call returns ``(tree,
+        new_codec_state)`` (error-feedback residual for stateful codecs,
+        pass-through otherwise); ``key`` seeds stochastic rounding."""
+        if spec is not None:
+            from repro.protocols.spec import apply_spec_tree
+            return apply_spec_tree(spec, f_new, f_old, codec=codec,
+                                   codec_state=codec_state, key=key,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)
         return kernel_ops.fed_mix_tree(M_new, M_old, f_new, f_old,
                                        codec=codec, codec_state=codec_state,
                                        key=key, use_pallas=use_pallas,

@@ -34,11 +34,36 @@ from repro.config import FLConfig
 from repro.configs.paper_models import PaperNetConfig
 from repro.core.straggler import straggler_mask
 from repro.core.topology import Topology
+from repro.kernels import ops as kernel_ops
 from repro.models.paper_nets import (
     init_paper_net, paper_net_accuracy, paper_net_loss,
 )
 from repro.protocols.base import Protocol, get
 from repro.protocols.context import make_context
+from repro.protocols.spec import apply_spec_flat
+
+MIX_PATHS = ("dense", "sparse", "auto")
+
+
+def _check_mix_path(mix_path: str) -> str:
+    if mix_path not in MIX_PATHS:
+        raise ValueError(f"unknown mix_path {mix_path!r}; expected one of "
+                         f"{', '.join(MIX_PATHS)}")
+    return mix_path
+
+
+def _resolve_spec(proto: Protocol, ctx, mix_path: str):
+    """The one mix_path dispatch rule both engines share: the protocol's
+    structured MixingSpec unless the path is 'dense'; 'sparse' refuses to
+    silently fall back when no spec exists."""
+    if mix_path == "dense":
+        return None
+    spec = proto.mixing_spec(ctx)
+    if spec is None and mix_path == "sparse":
+        raise ValueError(
+            f"protocol {proto.name!r} provides no mixing_spec; "
+            "mix_path='sparse' is unavailable (use 'auto' or 'dense')")
+    return spec
 
 
 # ---------------------------------------------------------------------------
@@ -91,27 +116,38 @@ def _gather_clients(data_dev, sel):
 # ---------------------------------------------------------------------------
 
 class DenseEngine:
-    """Drives one protocol's rounds through the dense mixing-matrix oracle on
-    the paper's own model classes (§4.2).
+    """Drives one protocol's rounds through its mixing operator on the
+    paper's own model classes (§4.2), on a PACKED federated state: the
+    [P, ...] client pytree lives as one flat [P, sum(sizes)] buffer
+    (``kernels.ops.pack_tree`` layout) across the whole round — and across
+    the whole ``run_rounds`` scan — so mixing, the codec wire, and
+    error-feedback all run on the flat carry while local training vmaps
+    over unpacked *views*. The global model is packed once per
+    ``run_rounds`` call, not once per sub-round mix.
 
     One round (``round_fn``):
 
       1. partition  — the protocol picks P participants and their clusters;
       2. local SGD  — vmapped over participants;
-      3. mixing     — the protocol's dense (M_new, M_old) form via a fresh
-         ``RoundContext``; with ``sync_period > 1`` intermediate sub-rounds
-         mix WITHOUT the global step;
+      3. mixing     — via a fresh ``RoundContext``: the protocol's
+         structured ``mixing_spec`` fast path (O(P·n) segment-reduce /
+         permutation-gather, no [P, P] operator) when available and
+         ``mix_path`` allows, else the dense (M_new, M_old) oracle; with
+         ``sync_period > 1`` intermediate sub-rounds mix WITHOUT the
+         global step;
       4. collapse   — the reported global model is the mean over the mixed
          client models (exact for server protocols, whose rows agree; the
          standard consensus-average readout for gossip).
 
     ``run_rounds(params, key, T)`` scan-compiles T rounds + per-round
-    evaluation into one program with on-device [T] metric buffers.
+    evaluation into one program with on-device [T] metric buffers and a
+    donated flat carry.
     """
 
     def __init__(self, net: PaperNetConfig, data_dev: Dict, fl: FLConfig,
                  proto: Protocol, topology: Optional[Topology] = None, *,
-                 mix_use_pallas: Optional[bool] = None, codec=None):
+                 mix_use_pallas: Optional[bool] = None, codec=None,
+                 mix_path: Optional[str] = None):
         self.net, self.fl, self.proto = net, fl, proto
         self.topology = topology
         self.data_dev = data_dev
@@ -119,6 +155,12 @@ class DenseEngine:
         #: None = auto (Pallas on TPU, jnp oracle on CPU); True forces the
         #: kernel (interpret mode off-TPU); False forces the jnp oracle
         self.mix_use_pallas = mix_use_pallas
+        #: which mixing lowering runs (default ``fl.mix_path``): "dense" =
+        #: the [P, P] matrix oracle (bit-for-bit the pre-spec program),
+        #: "sparse" = the protocol's structured ``mixing_spec`` kernels
+        #: (raises if the protocol provides none), "auto" = sparse whenever
+        #: a spec exists, dense otherwise
+        self.mix_path = _check_mix_path(mix_path or fl.mix_path)
         #: quantized-exchange wire (``repro.compression`` name or Codec);
         #: stored in active form — None/"none" keeps every round bit-for-bit
         #: the uncompressed program. Stateful codecs (error feedback) make
@@ -152,22 +194,62 @@ class DenseEngine:
         client_mean = jnp.mean(accs)
         return sample_weighted, client_mean
 
+    # -- packed-state helpers ------------------------------------------
+    def _pack_params(self, params):
+        """Pack ONE global model into its flat [sum(sizes)] row + the
+        TreeSpec that unpacks any [..., sum(sizes)] buffer back to
+        [..., *leaf_shape] views."""
+        flat, spec = kernel_ops.pack_tree(
+            jax.tree.map(lambda p: p[None], params))
+        return flat[0], spec
+
+    def _mix_flat(self, flat_new, flat_old, ctx, cstate):
+        """One mixing application on the packed [P, sum(sizes)] carry:
+        structured-spec kernels on the sparse path, the dense (M_new,
+        M_old) contraction otherwise; the codec wire sits identically in
+        front of both. Always returns ``(flat, codec_state)``."""
+        spec = _resolve_spec(self.proto, ctx, self.mix_path)
+        if spec is not None:
+            if self.codec is None:
+                out = apply_spec_flat(spec, flat_new, flat_old,
+                                      use_pallas=self.mix_use_pallas)
+                return out, cstate
+            return apply_spec_flat(
+                spec, flat_new, flat_old, codec=self.codec,
+                codec_state=cstate,
+                key=jax.random.fold_in(ctx.key, 0x636F6465),
+                use_pallas=self.mix_use_pallas)
+        M_new, M_old = self.proto.mixing_matrix(ctx)
+        if self.codec is None:
+            out = kernel_ops.fed_mix_flat(M_new, M_old, flat_new, flat_old,
+                                          use_pallas=self.mix_use_pallas)
+            return out, cstate
+        return kernel_ops.fed_mix_flat(
+            M_new, M_old, flat_new, flat_old, codec=self.codec,
+            codec_state=cstate, key=jax.random.fold_in(ctx.key, 0x636F6465),
+            use_pallas=self.mix_use_pallas)
+
     # -- one round -----------------------------------------------------
-    def _round(self, params, key, round_index=0, codec_state=None):
-        """One protocol round. Without a codec: ``(params', mean_loss)`` —
-        the exact pre-codec program. With one, every mixing application
-        puts the freshly-trained client models through the lossy wire
-        (quantize after pack, dequantize before unpack) and the return
-        grows a third element: the threaded error-feedback residual."""
+    def _round_flat(self, spec, flat_params, key, round_index=0,
+                    codec_state=None):
+        """One protocol round on the packed carry: ``flat_params`` is the
+        flat [sum(sizes)] global model, ``spec`` its TreeSpec. The round's
+        federated state stays a flat [P, sum(sizes)] buffer end-to-end —
+        the round-start state is a broadcast of the carry (packed once per
+        run, not once per sub-round mix), every mixing / codec /
+        error-feedback application runs on the flat buffer, and local
+        training vmaps over unpacked views. Returns ``(flat', mean_loss[,
+        codec_state])``."""
         proto, fl = self.proto, self.fl
         P = proto.num_participants(fl)
         L = proto.num_clusters(fl)
         k_sel, k_tr, k_str, k_mix = jax.random.split(key, 4)
         sel, cids = proto.partition(k_sel, fl, self.topology)
+        # gathered ONCE per round: the selection is fixed across sub-rounds
         cx, cy, cm, counts = _gather_clients(self.data_dev, sel)
         smask = straggler_mask(k_str, P, fl.straggler_rate)
-        old = jax.tree.map(
-            lambda p: jnp.broadcast_to(p[None], (P,) + p.shape), params)
+        flat_old = jnp.broadcast_to(flat_params[None],
+                                    (P, flat_params.shape[0]))
 
         def ctx_for(sub_round: int, sync: bool):
             return make_context(
@@ -176,38 +258,53 @@ class DenseEngine:
                 cluster_ids=cids, num_clusters=L, do_global_sync=sync,
                 topology=self.topology)
 
-        def mix(cp, sub_round: int, sync: bool, cstate):
-            ctx = ctx_for(sub_round, sync)
-            M_new, M_old = proto.mixing_matrix(ctx)
-            if self.codec is None:
-                out = proto.apply_mixing(M_new, M_old, cp, old,
-                                         use_pallas=self.mix_use_pallas)
-                return out, cstate
-            return proto.apply_mixing(
-                M_new, M_old, cp, old, codec=self.codec, codec_state=cstate,
-                key=jax.random.fold_in(ctx.key, 0x636F6465),
-                use_pallas=self.mix_use_pallas)
-
-        client_params, losses = None, jnp.zeros(())
+        flat_cp, losses = None, jnp.zeros(())
         cstate = codec_state
         sub_rounds = max(1, fl.sync_period)
         for r in range(sub_rounds):
             keys = jax.random.split(jax.random.fold_in(k_tr, r), P)
-            if client_params is None:
-                client_params, losses = self._vtrain(params, cx, cy, cm, keys)
+            if flat_cp is None:
+                params0 = kernel_ops.unpack_tree(flat_params, spec)
+                cp, losses = self._vtrain(params0, cx, cy, cm, keys)
             else:
-                start, cstate = mix(client_params, r, False, cstate)
-                client_params, losses = self._vtrain_per(start, cx, cy, cm, keys)
+                flat_start, cstate = self._mix_flat(flat_cp, flat_old,
+                                                    ctx_for(r, False), cstate)
+                start = kernel_ops.unpack_tree(flat_start, spec)
+                cp, losses = self._vtrain_per(start, cx, cy, cm, keys)
+            flat_cp = kernel_ops.pack_tree(cp)[0]
 
-        mixed, cstate = mix(client_params, sub_rounds, True, cstate)
-        new_params = jax.tree.map(lambda x: jnp.mean(x, axis=0), mixed)
+        flat_mixed, cstate = self._mix_flat(flat_cp, flat_old,
+                                            ctx_for(sub_rounds, True), cstate)
+        # consensus collapse in each LEAF's dtype (mean_packed), exactly as
+        # the unpacked program computed it — a whole-buffer mean would
+        # accumulate bf16 leaves in the promoted dtype
+        new_flat = kernel_ops.mean_packed(flat_mixed, spec)
         if self.codec is None:
-            return new_params, jnp.mean(losses)
-        return new_params, jnp.mean(losses), cstate
+            return new_flat, jnp.mean(losses)
+        return new_flat, jnp.mean(losses), cstate
+
+    def _round(self, params, key, round_index=0, codec_state=None):
+        """One protocol round on pytree params (the jitted ``round_fn``
+        API): pack, run the flat round, unpack. Without a codec:
+        ``(params', mean_loss)`` — value-identical to the pre-packed-state
+        program. With one, every mixing application puts the freshly-
+        trained client models through the lossy wire and the return grows
+        a third element: the threaded error-feedback residual."""
+        flat, spec = self._pack_params(params)
+        out = self._round_flat(spec, flat, key, round_index, codec_state)
+        params_out = kernel_ops.unpack_tree(out[0], spec)
+        if self.codec is None:
+            return params_out, out[1]
+        return params_out, out[1], out[2]
 
     # -- the scan-compiled training loop -------------------------------
     def run_rounds(self, params, key, T: int, eval_every: int = 1):
-        """Run T rounds as ONE compiled ``lax.scan`` program. Returns
+        """Run T rounds as ONE compiled ``lax.scan`` program over the
+        PACKED carry: the global model is packed into its flat
+        [sum(sizes)] form once here, every round/mix/codec application
+        inside the scan operates on flat buffers (training and evaluation
+        unpack views), the carry is donated to the compiled program, and
+        the final model is unpacked once on the way out. Returns
         (final_params, metrics) with metrics = {'train_loss', 'acc',
         'acc_client_mean'}, each a [T] on-device array; nothing syncs to
         host until the caller reads the buffers. With ``eval_every > 1``
@@ -220,50 +317,68 @@ class DenseEngine:
         ``run_rounds`` call == one training run on this engine; drive
         ``round_fn`` directly to thread residuals across calls)."""
         T, eval_every = int(T), max(1, int(eval_every))
-        cache_key = (T, eval_every)
+        flat0, spec = self._pack_params(params)      # packed ONCE per call
+        # the compiled run closes over the TreeSpec, so the cache must key
+        # on the params *structure* too — two layouts can share a packed
+        # width and would otherwise unpack each other's column slices
+        cache_key = (T, eval_every, spec)
         if cache_key not in self._run_cache:
 
-            def eval_at(params, t):
+            def eval_at(flat, t):
+                p = kernel_ops.unpack_tree(flat, spec)
                 if eval_every == 1:
-                    return self._eval(params)
+                    return self._eval(p)
                 return jax.lax.cond(
                     jnp.logical_or((t + 1) % eval_every == 0, t == T - 1),
                     self._eval,
-                    lambda _: (jnp.zeros(()), jnp.zeros(())), params)
+                    lambda _: (jnp.zeros(()), jnp.zeros(())), p)
 
             if self.codec is None:
                 def body(carry, t):
-                    params, key = carry
+                    flat, key = carry
                     key, kr = jax.random.split(key)
-                    params, loss = self._round(params, kr, t)
-                    acc_w, acc_m = eval_at(params, t)
-                    return (params, key), (loss, acc_w, acc_m)
+                    flat, loss = self._round_flat(spec, flat, kr, t)
+                    acc_w, acc_m = eval_at(flat, t)
+                    return (flat, key), (loss, acc_w, acc_m)
 
-                def run(params, key):
-                    (params, _), (loss, acc_w, acc_m) = jax.lax.scan(
-                        body, (params, key), jnp.arange(T))
-                    return params, {"train_loss": loss, "acc": acc_w,
-                                    "acc_client_mean": acc_m}
+                def run(flat, key):
+                    (flat, _), (loss, acc_w, acc_m) = jax.lax.scan(
+                        body, (flat, key), jnp.arange(T))
+                    return kernel_ops.unpack_tree(flat, spec), {
+                        "train_loss": loss, "acc": acc_w,
+                        "acc_client_mean": acc_m}
             else:
                 # error-feedback residuals (stateful codecs) ride the scan
                 # carry as one [P, sum(sizes)] f32 buffer per participant
                 # slot; stateless codecs carry None (an empty pytree).
                 def body(carry, t):
-                    params, key, cstate = carry
+                    flat, key, cstate = carry
                     key, kr = jax.random.split(key)
-                    params, loss, cstate = self._round(params, kr, t, cstate)
-                    acc_w, acc_m = eval_at(params, t)
-                    return (params, key, cstate), (loss, acc_w, acc_m)
+                    flat, loss, cstate = self._round_flat(spec, flat, kr, t,
+                                                          cstate)
+                    acc_w, acc_m = eval_at(flat, t)
+                    return (flat, key, cstate), (loss, acc_w, acc_m)
 
-                def run(params, key):
-                    cstate = self.init_codec_state(params)
-                    (params, _, _), (loss, acc_w, acc_m) = jax.lax.scan(
-                        body, (params, key, cstate), jnp.arange(T))
-                    return params, {"train_loss": loss, "acc": acc_w,
-                                    "acc_client_mean": acc_m}
+                def run(flat, key):
+                    cstate = self._init_codec_state_flat(flat)
+                    (flat, _, _), (loss, acc_w, acc_m) = jax.lax.scan(
+                        body, (flat, key, cstate), jnp.arange(T))
+                    return kernel_ops.unpack_tree(flat, spec), {
+                        "train_loss": loss, "acc": acc_w,
+                        "acc_client_mean": acc_m}
 
-            self._run_cache[cache_key] = jax.jit(run)
-        return self._run_cache[cache_key](params, key)
+            # the flat carry is ours (freshly packed) — donate it so the
+            # scan state aliases the input buffer instead of copying it
+            # (accelerators only: XLA:CPU can't alias and would just warn)
+            donate = () if jax.default_backend() == "cpu" else (0,)
+            self._run_cache[cache_key] = jax.jit(run, donate_argnums=donate)
+        return self._run_cache[cache_key](flat0, key)
+
+    def _init_codec_state_flat(self, flat):
+        if self.codec is None or not self.codec.stateful:
+            return None
+        P = self.proto.num_participants(self.fl)
+        return jnp.zeros((P, flat.shape[-1]), jnp.float32)
 
     def init_codec_state(self, params):
         """Zero error-feedback residual for ``round_fn``/``run_rounds``:
@@ -303,7 +418,8 @@ class MeshEngine:
     def __init__(self, model, fl: FLConfig, num_clients_dev: int,
                  local_steps: int, *, algorithm: str = "", counts=None,
                  remat: bool = True, out_shardings=None, mesh_info=None,
-                 mix_use_pallas: Optional[bool] = None, codec=None):
+                 mix_use_pallas: Optional[bool] = None, codec=None,
+                 mix_path: Optional[str] = None):
         self.proto = get(algorithm or fl.algorithm)
         self.fl = fl
         self.num_clients_dev = num_clients_dev
@@ -312,6 +428,11 @@ class MeshEngine:
         #: backend for the no-mesh dense fallback's fused mixing (see
         #: DenseEngine.mix_use_pallas); ignored when mesh_info is set
         self.mix_use_pallas = mix_use_pallas
+        #: mixing lowering for the no-mesh fallback (see
+        #: DenseEngine.mix_path; default ``fl.mix_path``). On a real mesh
+        #: the protocol's ``psum_mix`` grouped psums already realize the
+        #: structured traffic — the [D, D] oracle never runs there.
+        self.mix_path = _check_mix_path(mix_path or fl.mix_path)
         #: quantized-exchange wire (``repro.compression`` name or Codec),
         #: defaulting to ``fl.codec``; active form — None/"none" keeps the
         #: round bit-for-bit the uncompressed program. On a real mesh the
@@ -397,15 +518,21 @@ class MeshEngine:
             loss = jnp.mean(losses)
             return ((f_out, loss, codec_state) if self._codec_stateful
                     else (f_out, loss))
-        M_new, M_old = self.proto.mixing_matrix(ctx)
+        # no-mesh fallback: the protocol's structured mixing_spec kernels
+        # when the path allows (no [D, D] operator), else the dense oracle
+        spec = _resolve_spec(self.proto, ctx, self.mix_path)
+        M_new = M_old = None
+        if spec is None:
+            M_new, M_old = self.proto.mixing_matrix(ctx)
         if self.codec is None:
             f_out = self.proto.apply_mixing(M_new, M_old, f_new, f_params,
+                                            spec=spec,
                                             use_pallas=self.mix_use_pallas)
             return f_out, jnp.mean(losses)
-        # no-mesh dense fallback: codec at the pack_tree seam, residual as
-        # one [D, sum(sizes)] buffer (auto-initialized inside)
+        # codec at the pack_tree seam, residual as one [D, sum(sizes)]
+        # buffer (auto-initialized inside)
         f_out, codec_state = self.proto.apply_mixing(
-            M_new, M_old, f_new, f_params, codec=self.codec,
+            M_new, M_old, f_new, f_params, spec=spec, codec=self.codec,
             codec_state=codec_state, key=jax.random.fold_in(key, 0x636F6465),
             use_pallas=self.mix_use_pallas)
         if self._codec_stateful:

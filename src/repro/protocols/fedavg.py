@@ -16,6 +16,7 @@ from repro.config import FLConfig
 from repro.core.comm_model import CommParams, h_fedavg
 from repro.protocols.base import Protocol
 from repro.protocols.context import RoundContext
+from repro.protocols.spec import SegmentSpec
 
 
 class FedAvg(Protocol):
@@ -28,17 +29,27 @@ class FedAvg(Protocol):
         return 1
 
     # ------------------------------------------------------------------
-    def mixing_matrix(self, ctx: RoundContext):
+    def mixing_spec(self, ctx: RoundContext) -> SegmentSpec:
+        """The whole round is one rank-1 term — a single segment: every
+        output row is the |D_i|-weighted average of the surviving updates
+        (everyone-straggled rounds keep the mean of the old params)."""
         D = ctx.survive.shape[0]
         s = ctx.survive.astype(jnp.float32)
         w = s * ctx.counts.astype(jnp.float32)
         total = jnp.sum(w)
         coef = jnp.where(total > 0, w / jnp.maximum(total, 1e-12), 0.0)
-        M_new = jnp.broadcast_to(coef[None], (D, D))
         # everyone straggled -> keep the (replicated) old params
         all_dead = (total == 0).astype(jnp.float32)
-        M_old = all_dead * jnp.full((D, D), 1.0 / D, jnp.float32)
-        return M_new, M_old
+        return SegmentSpec(cluster_ids=jnp.zeros((D,), jnp.int32),
+                           w_new=coef,
+                           w_old=all_dead * jnp.full((D,), 1.0 / D,
+                                                     jnp.float32),
+                           num_segments=1)
+
+    def mixing_matrix(self, ctx: RoundContext):
+        # the dense oracle form IS the spec, densified (exact — see
+        # SegmentSpec.to_dense)
+        return self.mixing_spec(ctx).to_dense()
 
     # ------------------------------------------------------------------
     def psum_mix(self, f_new, f_old, ctx: RoundContext):

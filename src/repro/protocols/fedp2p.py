@@ -21,6 +21,7 @@ from repro.core.partition import random_partition
 from repro.core.topology import Topology
 from repro.protocols.base import Protocol
 from repro.protocols.context import RoundContext
+from repro.protocols.spec import SegmentSpec
 
 
 class FedP2P(Protocol):
@@ -44,11 +45,13 @@ class FedP2P(Protocol):
         return np.repeat(np.arange(L, dtype=np.int32), q)
 
     # ------------------------------------------------------------------
-    def mixing_matrix(self, ctx: RoundContext):
-        """Expressing the protocol as a [D, D] client-mixing matrix keeps
-        every leaf sharded along the client axis end-to-end: the contraction
-        over the client dim lowers to exactly the within-cluster / global
-        allreduce traffic the paper analyzes."""
+    def mixing_spec(self, ctx: RoundContext) -> SegmentSpec:
+        """Cluster-segment structure: within-cluster data-weighted averaging
+        is a block-diagonal operator whose rows agree inside each cluster
+        (one segment per local P2P network); the phase-3 server step
+        collapses everything to ONE segment — the global rank-1 term. Dead
+        clusters fall back to the mean of their members' OLD params via
+        ``w_old``."""
         L = ctx.num_clusters
         D = ctx.survive.shape[0]
         s = ctx.survive.astype(jnp.float32)
@@ -60,19 +63,29 @@ class FedP2P(Protocol):
         gamma = w * (C @ (alive / denom))                           # [D]
         if ctx.do_global_sync:
             n_alive = jnp.maximum(jnp.sum(alive), 1.0)
-            coef = gamma / n_alive                                  # [D]
-            M_new = jnp.broadcast_to(coef[None], (D, D))
             all_dead = (jnp.sum(alive) == 0).astype(jnp.float32)
-            M_old = all_dead * jnp.full((D, D), 1.0 / D, jnp.float32)
-            return M_new, M_old
-        # cluster-local sync: M[i, j] = [c(i) = c(j)] gamma_j; dead clusters
-        # fall back to the mean of their members' OLD params.
-        same = C @ C.T                                              # [D, D]
-        M_new = same * gamma[None, :]
+            return SegmentSpec(
+                cluster_ids=jnp.zeros((D,), jnp.int32),
+                w_new=gamma / n_alive,
+                w_old=all_dead * jnp.full((D,), 1.0 / D, jnp.float32),
+                num_segments=1)
         sizes = jnp.maximum(C.T @ jnp.ones((D,), jnp.float32), 1.0)  # [L]
-        dead_row = C @ (1.0 - alive)                                # [D]
-        M_old = same * (dead_row[:, None] * (C @ (1.0 / sizes))[None, :])
-        return M_new, M_old
+        dead = C @ (1.0 - alive)                                     # [D]
+        return SegmentSpec(
+            cluster_ids=ctx.cluster_ids.astype(jnp.int32),
+            w_new=gamma,
+            w_old=dead * (C @ (1.0 / sizes)),
+            num_segments=L)
+
+    def mixing_matrix(self, ctx: RoundContext):
+        """Expressing the protocol as a [D, D] client-mixing matrix keeps
+        every leaf sharded along the client axis end-to-end: the contraction
+        over the client dim lowers to exactly the within-cluster / global
+        allreduce traffic the paper analyzes. The dense form is the
+        cluster-segment spec, densified (exact — see SegmentSpec.to_dense);
+        for the cluster-local stage ``M[i, j] = [c(i) = c(j)] gamma_j``
+        with the dead-cluster old-param fallback on the ``M_old`` side."""
+        return self.mixing_spec(ctx).to_dense()
 
     # ------------------------------------------------------------------
     def psum_mix(self, f_new, f_old, ctx: RoundContext):

@@ -14,6 +14,7 @@ device-device traffic, zero server/DCN bytes. The ring is static; for the
 """
 from __future__ import annotations
 
+import functools
 from typing import List, Optional, Tuple
 
 import jax
@@ -25,6 +26,7 @@ from repro.core.comm_model import CommParams, allreduce_time
 from repro.core.topology import Topology
 from repro.protocols.base import Protocol
 from repro.protocols.context import RoundContext
+from repro.protocols.spec import MatchingSpec
 
 
 def _phase_groups(D: int) -> Tuple[List[List[int]], List[List[int]]]:
@@ -42,6 +44,23 @@ def _phase_groups(D: int) -> Tuple[List[List[int]], List[List[int]]]:
     if D == 1:
         phase1, phase2 = [[0]], [[0]]
     return phase1, phase2
+
+
+def perm_of_groups(D: int, groups) -> np.ndarray:
+    """[D] partner map of a pairing: perm[i] = i's partner (itself for a
+    bye/singleton) — the O(D) form of a matching's averaging matrix."""
+    perm = np.arange(D, dtype=np.int32)
+    for g in groups:
+        if len(g) == 2:
+            perm[g[0]], perm[g[1]] = g[1], g[0]
+    return perm
+
+
+@functools.lru_cache(maxsize=None)
+def _phase_perm_stack(D: int) -> np.ndarray:
+    """[2, D] partner maps of the two ring phases (even pairs, odd pairs)."""
+    g1, g2 = _phase_groups(D)
+    return np.stack([perm_of_groups(D, g1), perm_of_groups(D, g2)])
 
 
 def _avg_matrix(D: int, groups: List[List[int]]) -> np.ndarray:
@@ -78,6 +97,15 @@ class DecentralizedGossip(Protocol):
         stochastic; rows/cols sum to 1)."""
         g1, g2 = _phase_groups(D)
         return _avg_matrix(D, g2) @ _avg_matrix(D, g1)
+
+    def mixing_spec(self, ctx: RoundContext) -> MatchingSpec:
+        """Permutation structure: the round is two sequential pairing
+        phases, each an O(D) partner map — no [D, D] operator needed.
+        ``ctx.counts`` is ignored (pairwise exchanges are plain means) and
+        ``ctx.do_global_sync`` is ignored (there is no server step)."""
+        D = int(ctx.survive.shape[0])
+        return MatchingSpec(perms=jnp.asarray(_phase_perm_stack(D)),
+                            survive=ctx.survive)
 
     def mixing_matrix(self, ctx: RoundContext):
         # ctx.counts is ignored: gossip averaging is unweighted (each

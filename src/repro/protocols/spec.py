@@ -1,0 +1,207 @@
+"""MixingSpec — the structured form of a protocol's mixing operator.
+
+Every registered protocol's dense ``(M_new, M_old)`` pair (``mixing_matrix``)
+has O(D²) entries but O(D) structure: FedAvg/FedP2P rows agree within a
+cluster (block-diagonal with rank-1 blocks, plus the global-sync rank-1
+server term as the L=1 case), and the gossip family is a composition of
+pairwise matchings. ``Protocol.mixing_spec(ctx)`` returns that structure as
+one of two pytree records so engines can run the round in O(D·P) FLOPs and
+O(D) index memory (``kernels/fed_mix_sparse.py``) instead of the
+O(D²·P) dense contraction — the piece that makes D≈4096 simulator rounds
+tractable. The dense ``mixing_matrix`` stays the oracle: ``spec.to_dense()``
+reconstructs ``(M_new, M_old)`` exactly (elementwise/dyadic ops only), which
+``tests/test_mixing_spec.py`` pins per protocol over random contexts.
+
+* ``SegmentSpec`` — cluster-segment form:
+
+      out_i = sum_{j: c(j)=c(i)} (w_new_j f_new_j + w_old_j f_old_j)
+
+  ``cluster_ids`` [D] (all-zero ids = the global rank-1 term), per-source
+  weights ``w_new``/``w_old`` [D] (straggler masks, |D_i| data weights and
+  dead-cluster old-param fallbacks are folded into the weights), static
+  ``num_segments``.
+
+* ``MatchingSpec`` — permutation form: ``perms`` [S, D] stage partner maps
+  (``perm[i] == i`` for byes); stragglers contribute their OLD row, then
+  each stage averages every row with its partner. S=2 covers the static
+  ring gossip (even pairs then odd pairs), S=1 the per-round random perfect
+  matching of ``gossip_async``.
+
+``apply_spec_flat`` drives the structured kernels on already-packed
+[D, sum(sizes)] buffers (the packed-state ``DenseEngine`` carry);
+``apply_spec_tree`` wraps it in the shared ``pack_tree`` seam for [D, ...]
+pytrees. Both take the same quantized-exchange ``codec=`` seam as the dense
+path (``kernels.ops.fed_mix_flat``): the round DELTA goes through the lossy
+wire right after packing. (The int8 record is decoded before the structured
+mix — the fused ``fed_mix_q`` contraction is a dense-path optimization —
+but the decode is O(D·P) and no [D, D] operator is ever formed.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+
+
+@dataclass(frozen=True)
+class SegmentSpec:
+    """Block-diagonal / rank-1 mixing structure (FedAvg, FedP2P)."""
+    # --- data fields (traced) ------------------------------------------
+    cluster_ids: Any              # [D] int32 output/segment assignment
+    w_new: Any                    # [D] f32 per-source new-model weight
+    w_old: Any                    # [D] f32 per-source old-model weight
+    # --- meta fields (static) ------------------------------------------
+    num_segments: int = 1         # L — static segment count
+
+    def to_dense(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(M_new, M_old) [D, D] — exact reconstruction of the oracle form:
+        M[i, j] = [c(i) = c(j)] * w_j (elementwise products with exact
+        0.0/1.0 membership, so it reproduces ``mixing_matrix`` bit-for-bit).
+        """
+        same = (self.cluster_ids[:, None]
+                == self.cluster_ids[None, :]).astype(jnp.float32)
+        return (same * self.w_new.astype(jnp.float32)[None, :],
+                same * self.w_old.astype(jnp.float32)[None, :])
+
+
+@dataclass(frozen=True)
+class MatchingSpec:
+    """Pairwise-matching mixing structure (gossip family)."""
+    # --- data fields (traced) ------------------------------------------
+    perms: Any                    # [S, D] int32 stage partner maps
+    survive: Any                  # [D] 0/1 straggler mask
+
+    def to_dense(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(M_new, M_old) [D, D]: each stage is W_s = (I + P_s) / 2 (exactly
+        1.0 on the diagonal for byes), composed left-to-right; stragglers
+        factor as M_new = W·diag(s), M_old = W·diag(1-s). All entries are
+        small dyadic rationals, so the composition is exact in f32 and
+        matches the oracle's precomputed matrix stack bit-for-bit."""
+        D = self.perms.shape[-1]
+        eye = jnp.eye(D, dtype=jnp.float32)
+        W = None
+        for i in range(self.perms.shape[0]):
+            W_s = 0.5 * (eye + jax.nn.one_hot(self.perms[i], D,
+                                              dtype=jnp.float32))
+            W = W_s if W is None else W_s @ W
+        s = self.survive.astype(jnp.float32)
+        return W * s[None, :], W * (1.0 - s)[None, :]
+
+
+for _cls, _data in ((SegmentSpec, ("cluster_ids", "w_new", "w_old")),
+                    (MatchingSpec, ("perms", "survive"))):
+    jax.tree_util.register_dataclass(
+        _cls, data_fields=_data,
+        meta_fields=tuple(f.name for f in dataclasses.fields(_cls)
+                          if f.name not in _data))
+
+MixingSpec = (SegmentSpec, MatchingSpec)
+
+
+def jaxpr_materializes_shape(closed_jaxpr, shape: Tuple[int, ...],
+                             floating_only: bool = True) -> bool:
+    """True if any equation in the jaxpr (recursively, through scan/cond/
+    pjit sub-jaxprs) produces or consumes an array of exactly ``shape`` —
+    the O(D²) smoking gun the sparse path's no-[D, D] guarantee is pinned
+    against (dryrun artifacts and tests/test_mixing_spec.py).
+
+    ``floating_only`` (the default) restricts the probe to float dtypes:
+    the dense mixing operator is always a float matrix, while legitimate
+    O(D) index structures can coincide with the shape (gossip_async's
+    [R, D] int32 partner stack has R == D for odd D). A float coincidence
+    — a model whose packed width happens to equal D — would still trip
+    the probe; pick shapes/widths accordingly when asserting."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    shape = tuple(shape)
+
+    def matches(aval):
+        if tuple(getattr(aval, "shape", ())) != shape:
+            return False
+        dtype = getattr(aval, "dtype", None)
+        return (not floating_only or dtype is None
+                or jnp.issubdtype(dtype, jnp.floating))
+
+    def subjaxprs(eqn):
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for u in vs:
+                if isinstance(u, ClosedJaxpr):
+                    yield u.jaxpr
+                elif isinstance(u, Jaxpr):
+                    yield u
+
+    def walk(jaxpr) -> bool:
+        for eqn in jaxpr.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if aval is not None and matches(aval):
+                    return True
+            if any(walk(sub) for sub in subjaxprs(eqn)):
+                return True
+        return False
+
+    return walk(closed_jaxpr.jaxpr)
+
+
+def mix_flat_spec(spec, flat_new, flat_old, *, use_pallas=None,
+                  interpret=None):
+    """One structured mixing pass on packed [D, sum(sizes)] buffers —
+    dispatches to the spec's kernel (``kernels.ops`` backend rules)."""
+    if isinstance(spec, SegmentSpec):
+        return kernel_ops.fed_mix_segment(
+            spec.cluster_ids, spec.w_new, spec.w_old, flat_new, flat_old,
+            num_segments=spec.num_segments, use_pallas=use_pallas,
+            interpret=interpret)
+    if isinstance(spec, MatchingSpec):
+        return kernel_ops.fed_mix_matching(
+            spec.perms, spec.survive, flat_new, flat_old,
+            use_pallas=use_pallas, interpret=interpret)
+    raise TypeError(f"not a MixingSpec: {type(spec).__name__!r}")
+
+
+def apply_spec_flat(spec, flat_new, flat_old, *, codec=None, codec_state=None,
+                    key=None, use_pallas=None, interpret=None):
+    """Structured mixing on packed buffers with the same quantized-exchange
+    seam as ``kernels.ops.fed_mix_flat``: the round DELTA ``flat_new -
+    flat_old`` goes through the lossy wire, the reconstruction is mixed
+    through the spec's kernel. With ``codec`` the call returns
+    ``(flat, new_codec_state)`` (error-feedback residual auto-initialized
+    for stateful codecs)."""
+    from repro import compression
+
+    codec_given = codec is not None
+    codec = None if not codec_given else compression.active(codec)
+    if codec is None:
+        out = mix_flat_spec(spec, flat_new, flat_old,
+                            use_pallas=use_pallas, interpret=interpret)
+        return (out, codec_state) if codec_given else out
+
+    enc, d_shape, base, new_state = kernel_ops.wire_flat(
+        codec, flat_new, flat_old, codec_state, key=key)
+    x_hat = (base + codec.decode(enc, d_shape)).astype(flat_new.dtype)
+    out = mix_flat_spec(spec, x_hat, flat_old,
+                        use_pallas=use_pallas, interpret=interpret)
+    return out, new_state
+
+
+def apply_spec_tree(spec, f_new, f_old, *, codec=None, codec_state=None,
+                    key=None, use_pallas=None, interpret=None):
+    """Structured mixing over [D, ...] pytrees through the shared flat-param
+    packing seam (the spec-path analogue of ``kernels.ops.fed_mix_tree``)."""
+    flat_new, flat_old, tspec = kernel_ops.pack_tree_pair(
+        f_new, f_old, caller="apply_spec_tree")
+    if codec is None:
+        out = apply_spec_flat(spec, flat_new, flat_old,
+                              use_pallas=use_pallas, interpret=interpret)
+        return kernel_ops.unpack_tree(out, tspec)
+    out, new_state = apply_spec_flat(spec, flat_new, flat_old, codec=codec,
+                                     codec_state=codec_state, key=key,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret)
+    return kernel_ops.unpack_tree(out, tspec), new_state

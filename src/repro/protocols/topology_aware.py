@@ -44,7 +44,8 @@ class TopologyAwareFedP2P(FedP2P):
             jnp.repeat(jnp.arange(L, dtype=jnp.int32), Q))
         return sel, ids
 
-    # mesh_cluster_ids / mixing_matrix / psum_mix inherit from FedP2P: on the
+    # mesh_cluster_ids / mixing_matrix / mixing_spec (the cluster-segment
+    # sparse fast path) / psum_mix inherit from FedP2P: on the
     # production mesh the client axis is already laid out so that contiguous
     # groups are ICI neighbors — contiguous clusters ARE the hop-aware choice.
 
