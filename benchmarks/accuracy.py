@@ -11,7 +11,7 @@ rounds, smoother curves), not the absolute MNIST numbers.
 from __future__ import annotations
 
 import json
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 

@@ -1,0 +1,49 @@
+"""Static-analysis audit as a benchmark module: row-ifies ANALYSIS.json.
+
+Runs the ``repro.analysis`` CLI in a subprocess — it must force an 8-way
+host platform through XLA_FLAGS *before* jax is imported, which a parent
+process that already imported jax cannot do — and emits the audit summary
+as rows so ``BENCH_*.json`` tracks the audited-program surface over PRs.
+The quick pass audits the dense engine only; ``--full`` audits both
+engines across the default codec set, same as the gating CI step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(quick: bool = True):
+    out = os.path.join(tempfile.mkdtemp(prefix="repro-analysis-"),
+                       "ANALYSIS.json")
+    cmd = [sys.executable, "-m", "repro.analysis", "--out", out]
+    if quick:
+        cmd += ["--engine", "dense", "--codec", "none", "--rounds", "2"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(_REPO, "src"), env.get("PYTHONPATH"))
+        if p)
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=_REPO)
+    if not os.path.exists(out):
+        raise RuntimeError(
+            f"analysis CLI produced no report (exit {proc.returncode}): "
+            f"{proc.stderr[-500:]}")
+    with open(out) as fh:
+        doc = json.load(fh)
+    sev = {}
+    for f in doc["findings"]:
+        sev[f["severity"]] = sev.get(f["severity"], 0) + 1
+    return [
+        ("analysis/programs", float(len(doc["programs"])), ""),
+        ("analysis/rules", float(len(doc["rules"])), ""),
+        ("analysis/errors", float(doc["num_errors"]), ""),
+        ("analysis/warnings", float(sev.get("WARNING", 0)), ""),
+        ("analysis/ok", float(doc["ok"] and proc.returncode == 0),
+         f"exit={proc.returncode}"),
+    ]

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, List, Tuple
 
 Row = Tuple[str, float, str]     # (name, us_per_call_or_metric, derived)
 

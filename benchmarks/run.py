@@ -23,9 +23,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (accuracy, comm_time, compression_sweep,
-                            kernel_bench, lq_sweep, roofline, scale_sweep,
-                            stragglers, theory_bound, topology_gain)
+    from benchmarks import (accuracy, analysis_audit, comm_time,
+                            compression_sweep, kernel_bench, lq_sweep,
+                            roofline, scale_sweep, stragglers, theory_bound,
+                            topology_gain)
     modules = {
         "accuracy": lambda: accuracy.run(quick=quick)[0],   # Table 1 + Fig 2
         "comm_time": lambda: comm_time.run(quick=quick),    # Fig 3
@@ -39,6 +40,8 @@ def main(argv=None) -> None:
         # accuracy-vs-bits frontier of the quantized-exchange codecs
         "compression": lambda: compression_sweep.run(quick=quick)[0],
         "roofline": lambda: roofline.run(quick=quick),      # deliverable (g)
+        # jaxpr auditor summary (programs/rules/errors) from ANALYSIS.json
+        "analysis": lambda: analysis_audit.run(quick=quick),
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(modules):

@@ -1,0 +1,57 @@
+"""repro.analysis — a static program auditor for the engines' performance
+invariants.
+
+The paper's efficiency claims live in program STRUCTURE — O(D·n) mixing
+instead of O(D²), exactly the grouped psums the protocol's matching
+implies, zero extra collectives on the quantized wire. This package
+machine-checks those claims on the traced jaxprs themselves:
+
+* ``walker``   — the ONE recursive jaxpr traversal every static check
+  shares (``iter_eqns`` / ``fold`` / ``find_avals``); the old ad-hoc
+  walkers (``protocols.spec.jaxpr_materializes_shape``,
+  ``launch.roofline.jaxpr_cost``) are now thin shims on it.
+* ``base``     — the ``Rule`` registry (mirrors the protocols registry:
+  one module + one ``register`` call per rule).
+* ``rules``    — the built-in rules: no-dense-mixing, collective-census,
+  scan-carry-stability, no-host-transfer, donation-integrity.
+* ``programs`` — suite builders tracing one-round and T-round programs
+  for every registered protocol on both engines.
+* CLI          — ``python -m repro.analysis --protocol all --engine both``
+  writes ANALYSIS.json and exits nonzero on ERROR findings (the CI gate).
+
+This module is import-light on purpose: nothing here pulls in jax, so
+``python -m repro.analysis`` can force the host device count before jax
+initializes, and ``protocols.spec`` can import the walker without cycles.
+Heavy members resolve lazily via PEP 562.
+"""
+from repro.analysis.findings import ERROR, INFO, WARNING, Finding  # noqa: F401
+
+_LAZY = {
+    # walker (imports jax)
+    "EqnSite": "walker", "SubJaxpr": "walker", "fold": "walker",
+    "find_avals": "walker", "iter_eqns": "walker",
+    "materializes_shape": "walker", "sub_jaxprs": "walker",
+    # rule registry
+    "Rule": "base", "all_rules": "base", "get_rule": "base",
+    "register_rule": "base", "rule_names": "base", "run_rules": "base",
+    # program suites
+    "Program": "programs", "build_suite": "programs",
+    "dense_programs": "programs", "mesh_programs": "programs",
+    # census helper
+    "census": "rules.collective_census",
+}
+
+_RENAME = {"get_rule": "get", "register_rule": "register",
+           "rule_names": "names"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f"repro.analysis.{_LAZY[name]}")
+        return getattr(mod, _RENAME.get(name, name))
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,81 @@
+import os
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+# ^ MUST precede any jax-importing import (dryrun.py pattern): mesh-engine
+#   programs trace shard_map bodies against an 8-way data mesh.
+
+"""Audit every registered protocol's compiled programs on both engines.
+
+  PYTHONPATH=src python -m repro.analysis --protocol all --engine both \
+      --mix-path auto --codec none,int8
+
+Traces one-round and T-round programs for each (protocol, codec) on the
+requested engines, runs every registered rule, prints the findings table,
+writes ANALYSIS.json, and exits nonzero on ERROR findings — the CI gate.
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static jaxpr auditor for the engines' performance "
+                    "invariants")
+    ap.add_argument("--protocol", default="all", metavar="NAME[,NAME...]",
+                    help="registered protocol name(s), or 'all'")
+    ap.add_argument("--engine", choices=("dense", "mesh", "both"),
+                    default="both")
+    ap.add_argument("--mix-path", dest="mix_path", default="auto",
+                    choices=("dense", "sparse", "auto"),
+                    help="dense-engine mixing lowering to trace "
+                         "(the mesh engine always lowers grouped psums)")
+    ap.add_argument("--codec", default="none,int8", metavar="NAME[,NAME...]",
+                    help="repro.compression codec(s) to lower into the "
+                         "programs")
+    ap.add_argument("--rounds", type=int, default=3, metavar="T",
+                    help="trip count of the T-round run_rounds programs")
+    ap.add_argument("--rules", default=None, metavar="ID[,ID...]",
+                    help="run only these rules (default: all registered)")
+    ap.add_argument("--out", default="ANALYSIS.json",
+                    help="JSON artifact path ('' to skip writing)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro import protocols
+    from repro.analysis import base, programs, report
+
+    if args.list_rules:
+        for rule in base.all_rules():
+            print(f"{rule.id:24s} {rule.doc}")
+        return 0
+
+    names = (list(protocols.names()) if args.protocol == "all"
+             else [protocols.get(n.strip()).name
+                   for n in args.protocol.split(",")])
+    engines = {"dense": ("dense",), "mesh": ("mesh",),
+               "both": ("dense", "mesh")}[args.engine]
+    codecs = tuple(c.strip() for c in args.codec.split(",") if c.strip())
+    rules = (base.all_rules() if args.rules is None
+             else [base.get(r.strip()) for r in args.rules.split(",")])
+
+    progs = programs.build_suite(names, engines=engines,
+                                 mix_path=args.mix_path, codecs=codecs,
+                                 rounds=args.rounds)
+    findings = base.run_rules(progs, rules)
+    print(report.render_table(progs, findings))
+    if args.out:
+        doc = report.write_json(args.out, progs, findings, rules)
+        print(f"wrote {args.out}")
+    else:
+        doc = report.to_json(progs, findings, rules)
+    n_err = doc["num_errors"]
+    print(f"{len(progs)} programs, {len(rules)} rules, "
+          f"{len(findings)} findings, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Rule base class + registry for the jaxpr program auditor.
+
+Mirrors the protocols registry (``repro.protocols.base``): a rule is one
+class with an id, one ``check(program) -> [Finding, ...]`` method, and one
+``register()`` call at the bottom of its module. Adding a rule is one file
+under ``repro/analysis/rules/`` plus one import in ``rules/__init__.py`` —
+the CLI, the report, and CI pick it up automatically.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.analysis.findings import Finding
+
+
+class Rule:
+    """One machine-checked program invariant.
+
+    Subclasses set ``id``/``doc`` and implement ``check``. ``check``
+    receives a ``repro.analysis.programs.Program`` (a traced jaxpr plus
+    the configuration metadata that produced it) and returns the rule's
+    findings for that program — an empty list means the invariant holds.
+    Rules must be pure inspectors: no tracing, no device execution.
+    """
+
+    #: stable rule identifier, e.g. "no-dense-mixing"
+    id: str = ""
+    #: one-line description shown by ``--list-rules`` and the README table
+    doc: str = ""
+
+    def applies(self, program) -> bool:
+        """Whether this rule audits ``program`` at all (default: yes).
+        Rules that only make sense for, e.g., sparse-path programs
+        override this so the report can distinguish 'checked, clean'
+        from 'not applicable'."""
+        return True
+
+    def check(self, program) -> List[Finding]:
+        raise NotImplementedError
+
+    # convenience for subclasses
+    def finding(self, severity: str, program, where: str,
+                message: str) -> Finding:
+        return Finding(rule=self.id, severity=severity, program=program.name,
+                       where=where, message=message)
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if not rule.id:
+        raise ValueError("rule must set a non-empty id")
+    if rule.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rule.id!r}")
+    _REGISTRY[rule.id] = rule
+    return rule
+
+
+def unregister(rule_id: str) -> None:
+    _REGISTRY.pop(rule_id, None)
+
+
+def names() -> List[str]:
+    _ensure_builtin_rules()
+    return sorted(_REGISTRY)
+
+
+def get(rule_id: str) -> Rule:
+    _ensure_builtin_rules()
+    try:
+        return _REGISTRY[rule_id]
+    except KeyError:
+        raise KeyError(f"unknown rule {rule_id!r}; registered: "
+                       f"{', '.join(sorted(_REGISTRY)) or '(none)'}") from None
+
+
+def all_rules() -> List[Rule]:
+    _ensure_builtin_rules()
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def _ensure_builtin_rules() -> None:
+    """Import the built-in rule modules (each self-registers on import).
+    Deferred so importing ``repro.analysis.base`` never drags in jax."""
+    import repro.analysis.rules  # noqa: F401
+
+
+def run_rules(programs: Sequence, rules: Sequence[Rule] = None
+              ) -> List[Finding]:
+    """Audit every program with every applicable rule; findings come back
+    in (program, rule) order so the report is deterministic."""
+    if rules is None:
+        rules = all_rules()
+    findings: List[Finding] = []
+    for program in programs:
+        for rule in rules:
+            if rule.applies(program):
+                findings.extend(rule.check(program))
+    return findings

@@ -1,0 +1,40 @@
+"""Finding — the one structured record every analysis rule emits.
+
+A finding is a (rule id, severity, program, equation path, message) tuple;
+the CLI renders them as a table, ``ANALYSIS.json`` serializes them, and CI
+gates on ``severity == ERROR``. Severities:
+
+* ``ERROR``   — a machine-checked performance invariant is violated (a
+                re-materialized [D, D] operator, an extra collective on the
+                wire, a host callback inside a scan body, a dead donation).
+                The CLI exits nonzero.
+* ``WARNING`` — suspicious but not a proven regression (e.g. the packed
+                carry rebuilt by concatenation each iteration).
+* ``INFO``    — context the table prints but nothing gates on.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+ERROR = "ERROR"
+WARNING = "WARNING"
+INFO = "INFO"
+
+SEVERITIES = (ERROR, WARNING, INFO)
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str          # rule id, e.g. "no-dense-mixing"
+    severity: str      # ERROR | WARNING | INFO
+    program: str       # audited program name, e.g. "dense/fedp2p/auto/none/round"
+    where: str         # equation path inside the program's jaxpr ("" = whole)
+    message: str
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}; expected "
+                             f"one of {', '.join(SEVERITIES)}")
+
+    def to_dict(self) -> dict:
+        return asdict(self)

@@ -1,0 +1,265 @@
+"""Traced audit programs: the jaxprs the rules inspect.
+
+A ``Program`` is one traced entry point — a single protocol round or a full
+T-round ``run_rounds`` scan — on one engine, with the configuration
+metadata the rules need (peer count for the dense-operator probe, the
+spec-implied collective budget, the donation contract). Builders trace with
+``jax.make_jaxpr`` over ``ShapeDtypeStruct``s / tiny concrete models, so
+nothing executes and no real data is needed.
+
+Both suites deliberately use peer counts and model widths that cannot
+collide: the dense suite's packed width (610 for the logreg paper net) is
+far from its participant count (8), so a float [P, P] hit really is the
+dense mixing operator, never a training-shape coincidence.
+
+Mesh-engine programs trace ``shard_map`` bodies against a (D, 1)
+data×model mesh, which requires D visible devices — the CLI forces host
+devices via XLA_FLAGS (``repro.analysis.__main__``); in-process callers on
+a single device get a ``RuntimeError`` from ``mesh_programs`` and should
+use the subprocess pattern of tests/test_sharding_and_dryrun.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import protocols
+from repro.config import FLConfig
+from repro.configs.paper_models import LOGREG_SYN
+from repro.protocols.context import make_context
+from repro.protocols.engine import DenseEngine, MeshEngine
+
+
+@dataclass
+class Program:
+    """One traced program plus the metadata rules audit it against."""
+    name: str                 # "{engine}/{protocol}/{mix_path}/{codec}/{kind}"
+    jaxpr: Any                # ClosedJaxpr from jax.make_jaxpr
+    engine: str               # "dense" | "mesh"
+    protocol: str
+    mix_path: str             # resolved lowering: "sparse"|"dense"|"psum"
+    codec: str
+    kind: str                 # "round" | "run"
+    meta: Dict[str, Any] = field(default_factory=dict)
+    # meta keys the built-in rules read:
+    #   num_peers      — D/P, the client-axis width ([D, D] probe shapes)
+    #   sparse_path    — True -> no-dense-mixing applies
+    #   census_budget  — {collective prim: count} implied by the protocol's
+    #                    mixing structure for ONE round (dense engine: {})
+    #   rounds         — census scale factor (T for "run" programs)
+    #   donate_intent  — flat invar indices the engine donates on
+    #                    accelerators (donation-integrity applies)
+    #   stateful_codec — True for error-feedback codecs (residual carry)
+
+
+# ---------------------------------------------------------------------------
+# dense (simulator / oracle) suite
+# ---------------------------------------------------------------------------
+
+DENSE_P = 8          # participants; far from the 610 packed logreg width
+
+
+def _dense_fl(P: int) -> FLConfig:
+    return FLConfig(num_clients=P, num_clusters=2,
+                    devices_per_cluster=P // 2, participation=P,
+                    local_epochs=1, batch_size=4, lr=0.05,
+                    straggler_rate=0.1)
+
+
+def _dense_data(P: int):
+    z = jnp.zeros
+    F = LOGREG_SYN.input_dim
+    return {"x": z((P, 4, F)), "y": z((P, 4), jnp.int32), "mask": z((P, 4)),
+            "counts": jnp.ones((P,)),
+            "test_x": z((P, 2, F)), "test_y": z((P, 2), jnp.int32),
+            "test_mask": z((P, 2))}
+
+
+def _resolved_mix_path(proto, fl: FLConfig, mix_path: str) -> str:
+    """Which lowering 'auto' lands on: probe ``mixing_spec`` on a concrete
+    context built exactly the way the engine builds one."""
+    if mix_path == "dense":
+        return "dense"
+    P = proto.num_participants(fl)
+    _, cids = proto.partition(jax.random.PRNGKey(0), fl, None)
+    ctx = make_context(key=jax.random.PRNGKey(0),
+                       survive=jnp.ones((P,), jnp.float32),
+                       counts=jnp.ones((P,), jnp.float32),
+                       cluster_ids=cids,
+                       num_clusters=proto.num_clusters(fl),
+                       do_global_sync=True)
+    if proto.mixing_spec(ctx) is not None:
+        return "sparse"
+    if mix_path == "sparse":
+        raise ValueError(f"protocol {proto.name!r} provides no mixing_spec")
+    return "dense"
+
+
+def dense_programs(protocol: str, *, codec: str = "none",
+                   mix_path: str = "auto", rounds: int = 3,
+                   P: int = DENSE_P, kinds: Tuple[str, ...] = ("round", "run")
+                   ) -> List[Program]:
+    """Trace a DenseEngine round and/or T-round run program for one
+    (protocol, codec, mix_path). Dense-engine programs have a ZERO
+    collective budget — the simulator path never touches the network."""
+    proto = protocols.get(protocol)
+    fl = _dense_fl(P)
+    resolved = _resolved_mix_path(proto, fl, mix_path)
+    engine = DenseEngine(LOGREG_SYN, _dense_data(P), fl, proto,
+                         codec=None if codec == "none" else codec,
+                         mix_path=mix_path)
+    params = engine.init_params(0)
+    key = jax.random.PRNGKey(0)
+    stateful = engine.codec is not None and engine.codec.stateful
+    base_meta = {"num_peers": P, "sparse_path": resolved == "sparse",
+                 "census_budget": {}, "stateful_codec": stateful}
+    out: List[Program] = []
+    if "round" in kinds:
+        jaxpr = jax.make_jaxpr(engine._round)(params, key)
+        out.append(Program(
+            name=f"dense/{protocol}/{resolved}/{codec}/round",
+            jaxpr=jaxpr, engine="dense", protocol=protocol,
+            mix_path=resolved, codec=codec, kind="round",
+            meta=dict(base_meta, rounds=1)))
+    if "run" in kinds:
+        flat0, spec = engine._pack_params(params)
+        run = engine._build_run(spec, rounds, 1)
+        jaxpr = jax.make_jaxpr(run)(flat0, key)
+        out.append(Program(
+            name=f"dense/{protocol}/{resolved}/{codec}/run{rounds}",
+            jaxpr=jaxpr, engine="dense", protocol=protocol,
+            mix_path=resolved, codec=codec, kind="run",
+            meta=dict(base_meta, rounds=rounds,
+                      donate_intent=tuple(engine._donate_argnums))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mesh (production shard_map) suite
+# ---------------------------------------------------------------------------
+
+MESH_D = 8
+
+
+class ToyMeshModel:
+    """Minimal 2-leaf model satisfying the MeshEngine contract
+    (``loss_fn(params, batch, remat=...) -> (loss, aux)``) so mesh-path
+    programs trace in seconds."""
+    F, K = 8, 4
+
+    def init(self, key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (self.F, self.K),
+                                             jnp.float32),
+                "b": jnp.zeros((self.K,), jnp.float32)}
+
+    def loss_fn(self, params, batch, remat=False):
+        logits = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((logits - batch["y"]) ** 2), {}
+
+
+def _mesh_info(D: int):
+    from repro.sharding.rules import MeshInfo
+    if len(jax.devices()) < D:
+        raise RuntimeError(
+            f"mesh-engine analysis needs {D} devices, found "
+            f"{len(jax.devices())}; run via `python -m repro.analysis` "
+            "(which forces host devices through XLA_FLAGS) or the "
+            "subprocess pattern of tests/test_sharding_and_dryrun.py")
+    mesh = jax.make_mesh((D, 1), ("data", "model"))
+    return MeshInfo(mesh=mesh, dp_axes=("data",), tp_axis="model",
+                    strategy="dp")
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def mesh_budget(proto, fl: FLConfig, D: int, info, fp_sds) -> Dict[str, float]:
+    """The spec-implied per-round collective budget: the census of the
+    protocol's ``psum_mix`` traced ALONE, uncompressed. A full round must
+    hit exactly this census — local training is client-diagonal (zero
+    collectives) and codecs wrap the wire client-side (PR 4's 'zero extra
+    collectives' claim, machine-checked by the collective-census rule)."""
+    from repro.analysis.rules.collective_census import census
+    ids = proto.mesh_cluster_ids(D, fl)
+    L = int(ids.max()) + 1
+    counts = jnp.ones((D,), jnp.float32)
+
+    def mix(f_new, f_old, survive, key):
+        ctx = make_context(key=key, survive=survive, counts=counts,
+                           cluster_ids=ids, num_clusters=L,
+                           do_global_sync=True, mesh_info=info)
+        return proto.psum_mix(f_new, f_old, ctx)
+
+    jaxpr = jax.make_jaxpr(mix)(
+        fp_sds, fp_sds, _sds((D,)),
+        jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+    return census(jaxpr)
+
+
+def mesh_programs(protocol: str, *, codec: str = "none", rounds: int = 3,
+                  D: int = MESH_D, local_steps: int = 2, batch: int = 2,
+                  kinds: Tuple[str, ...] = ("round", "run")) -> List[Program]:
+    """Trace a MeshEngine round and/or T-round run program for one
+    (protocol, codec) against a (D, 1) data mesh, with the protocol's
+    psum_mix-implied collective budget attached."""
+    proto = protocols.get(protocol)
+    info = _mesh_info(D)
+    fl = FLConfig(num_clusters=2, lr=0.05)
+    model = ToyMeshModel()
+    engine = MeshEngine(model, fl, D, local_steps, algorithm=protocol,
+                        mesh_info=info,
+                        codec=None if codec == "none" else codec)
+    F, K = model.F, model.K
+    fp = {"w": _sds((D, F, K)), "b": _sds((D, K))}
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    budget = mesh_budget(proto, fl, D, info, fp)
+    stateful = engine._codec_stateful
+    base_meta = {"num_peers": D, "sparse_path": True,
+                 "census_budget": budget, "stateful_codec": stateful}
+    out: List[Program] = []
+    if "round" in kinds:
+        b1 = {"x": _sds((D, local_steps, batch, F)),
+              "y": _sds((D, local_steps, batch, K))}
+        jaxpr = jax.make_jaxpr(
+            lambda f, b, s, k: engine._round(f, b, s, k,
+                                             do_global_sync=True))(
+            fp, b1, _sds((D,)), key)
+        out.append(Program(
+            name=f"mesh/{protocol}/psum/{codec}/round",
+            jaxpr=jaxpr, engine="mesh", protocol=protocol, mix_path="psum",
+            codec=codec, kind="round", meta=dict(base_meta, rounds=1)))
+    if "run" in kinds:
+        bT = {"x": _sds((rounds, D, local_steps, batch, F)),
+              "y": _sds((rounds, D, local_steps, batch, K))}
+        jaxpr = jax.make_jaxpr(
+            lambda f, k, b: engine._run(f, k, b))(fp, key, bT)
+        out.append(Program(
+            name=f"mesh/{protocol}/psum/{codec}/run{rounds}",
+            jaxpr=jaxpr, engine="mesh", protocol=protocol, mix_path="psum",
+            codec=codec, kind="run", meta=dict(base_meta, rounds=rounds)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# suite composition
+# ---------------------------------------------------------------------------
+
+def build_suite(protocol_names=None, *, engines=("dense", "mesh"),
+                mix_path: str = "auto", codecs=("none",), rounds: int = 3
+                ) -> List[Program]:
+    """Every (protocol x codec) program on the requested engines."""
+    names = list(protocol_names) if protocol_names else list(protocols.names())
+    out: List[Program] = []
+    for name in names:
+        for codec in codecs:
+            if "dense" in engines:
+                out.extend(dense_programs(name, codec=codec,
+                                          mix_path=mix_path, rounds=rounds))
+            if "mesh" in engines:
+                out.extend(mesh_programs(name, codec=codec, rounds=rounds))
+    return out

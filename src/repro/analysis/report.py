@@ -1,0 +1,75 @@
+"""Rendering for audit results: the human table and ANALYSIS.json."""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence
+
+from repro.analysis.findings import ERROR, WARNING, Finding
+
+
+def _census_str(meta: Dict) -> str:
+    c = meta.get("census")
+    if not c:
+        return "-"
+    return ",".join(f"{k}:{v:g}" for k, v in sorted(c.items()))
+
+
+def render_table(programs: Sequence, findings: Sequence[Finding]) -> str:
+    """Program summary table + one line per finding."""
+    by_prog: Dict[str, List[Finding]] = {}
+    for f in findings:
+        by_prog.setdefault(f.program, []).append(f)
+    rows = [("program", "eqns", "collectives", "findings")]
+    for p in programs:
+        fs = by_prog.get(p.name, [])
+        ne = sum(1 for _ in _count_eqns(p.jaxpr))
+        status = "clean" if not fs else " ".join(
+            f"{s}:{n}" for s, n in _sev_counts(fs))
+        rows.append((p.name, str(ne), _census_str(p.meta), status))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "-" * max(len(l) for l in lines))
+    for f in findings:
+        where = f" at {f.where}" if f.where else ""
+        lines.append(f"[{f.severity}] {f.rule} :: {f.program}{where}: "
+                     f"{f.message}")
+    return "\n".join(lines)
+
+
+def _count_eqns(jaxpr):
+    from repro.analysis.walker import iter_eqns
+    return iter_eqns(jaxpr)
+
+
+def _sev_counts(fs: List[Finding]):
+    order = (ERROR, WARNING, "INFO")
+    counts = [(s, sum(1 for f in fs if f.severity == s)) for s in order]
+    return [(s, n) for s, n in counts if n]
+
+
+def to_json(programs: Sequence, findings: Sequence[Finding],
+            rules: Sequence) -> Dict:
+    return {
+        "programs": [{
+            "name": p.name, "engine": p.engine, "protocol": p.protocol,
+            "mix_path": p.mix_path, "codec": p.codec, "kind": p.kind,
+            "rounds": p.meta.get("rounds", 1),
+            "num_peers": p.meta.get("num_peers"),
+            "sparse_path": p.meta.get("sparse_path", False),
+            "census": p.meta.get("census", {}),
+            "census_budget": p.meta.get("census_budget", {}),
+        } for p in programs],
+        "findings": [f.to_dict() for f in findings],
+        "rules": {r.id: r.doc for r in rules},
+        "num_errors": sum(1 for f in findings if f.severity == ERROR),
+        "ok": not any(f.severity == ERROR for f in findings),
+    }
+
+
+def write_json(path: str, programs: Sequence, findings: Sequence[Finding],
+               rules: Sequence) -> Dict:
+    doc = to_json(programs, findings, rules)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+    return doc

@@ -1,0 +1,11 @@
+"""Built-in audit rules — importing this package registers all of them.
+
+Adding a rule mirrors adding a protocol: one module here with a
+``Rule`` subclass and a ``register(TheRule())`` call at the bottom, plus
+one import line below. The CLI, the JSON artifact, and CI gate pick it up
+automatically.
+"""
+from repro.analysis.rules import (  # noqa: F401
+    collective_census, donation, no_dense_mixing, no_host_transfer,
+    scan_carry,
+)

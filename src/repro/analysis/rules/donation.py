@@ -1,0 +1,87 @@
+"""donation-integrity: buffers the engine promises to donate are really
+consumed, and the program gives XLA somewhere to alias them.
+
+``DenseEngine.run_rounds`` donates the freshly-packed [Σsizes] carry
+(``_donate_argnums``) so the scan state reuses the input buffer instead
+of copying it. That contract silently rots in two ways: the donated invar
+stops being consumed at all (dead arg — the donation frees nothing and
+any caller still holding the buffer gets poisoned for no benefit), or it
+is "aliased away" — passed straight through to an output unchanged, so
+there is nothing in place to update. Programs advertise their contract
+via ``meta['donate_intent']`` (flat invar indices); this rule checks each
+donated invar is consumed by real computation (ERROR if dead), flags
+identity pass-through (WARNING), and verifies an alias/reuse site exists:
+either the invar seeds a scan/while carry slot (in-place loop state — the
+run_rounds case) or some program output matches its shape/dtype exactly
+(WARNING when neither holds).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.base import Rule, register
+from repro.analysis.findings import ERROR, WARNING, Finding
+from repro.analysis.walker import _open
+
+
+def _carry_slots(eqn):
+    """Invars of a scan/while eqn that are loop-carry seeds."""
+    p = eqn.params
+    if eqn.primitive.name == "scan":
+        nc, nk = int(p["num_consts"]), int(p["num_carry"])
+        return eqn.invars[nc:nc + nk]
+    if eqn.primitive.name == "while":
+        nco = int(p.get("cond_nconsts", 0))
+        nbo = int(p.get("body_nconsts", 0))
+        return eqn.invars[nco + nbo:]
+    return ()
+
+
+class DonationIntegrity(Rule):
+    id = "donation-integrity"
+    doc = ("donated args are consumed and have an alias/reuse site "
+           "(loop carry or matching output)")
+
+    def applies(self, program) -> bool:
+        return bool(program.meta.get("donate_intent"))
+
+    def check(self, program) -> List[Finding]:
+        jaxpr = _open(program.jaxpr)
+        findings: List[Finding] = []
+        for idx in program.meta["donate_intent"]:
+            var = jaxpr.invars[idx]
+            consumed = any(any(v is var for v in eqn.invars)
+                           for eqn in jaxpr.eqns)
+            passthrough = any(v is var for v in jaxpr.outvars)
+            if not consumed:
+                if passthrough:
+                    findings.append(self.finding(
+                        WARNING, program, "",
+                        f"donated invar {idx} is aliased away: it passes "
+                        f"through to an output unchanged — nothing "
+                        f"updates the donated buffer"))
+                else:
+                    findings.append(self.finding(
+                        ERROR, program, "",
+                        f"donated invar {idx} is dead: the program never "
+                        f"consumes it, so donation frees nothing and "
+                        f"poisons the caller's buffer for no benefit"))
+                continue
+            reused = any(any(v is var for v in _carry_slots(eqn))
+                         for eqn in jaxpr.eqns)
+            if not reused:
+                aval = var.aval
+                reused = any(
+                    tuple(getattr(o.aval, "shape", ())) == tuple(aval.shape)
+                    and getattr(o.aval, "dtype", None) == aval.dtype
+                    for o in jaxpr.outvars if hasattr(o, "aval"))
+            if not reused:
+                findings.append(self.finding(
+                    WARNING, program, "",
+                    f"donated invar {idx} has no alias/reuse site: it "
+                    f"neither seeds a loop carry nor matches any output "
+                    f"shape/dtype"))
+        return findings
+
+
+register(DonationIntegrity())

@@ -1,0 +1,54 @@
+"""no-dense-mixing: sparse-path programs must not materialize the dense
+mixing operator.
+
+The paper's communication/compute win is structural: the structured-sparse
+fast path mixes in O(D·n) with segment-reduce / permutation-gather kernels
+and NEVER builds the [D, D] float mixing matrix (or gossip_async's
+[R, D, D] per-matching stack). This rule generalizes the old dryrun probe
+(``spec.jaxpr_materializes_shape``) to every traced program: any float
+array of exactly [D, D] — or rank-3 [*, D, D] — anywhere in a sparse-path
+jaxpr is the O(D²) smoking gun and an ERROR.
+
+Only float dtypes count: legitimate O(D) index structures can coincide
+with the shape (gossip_async's [R, D] int32 partner stack has R == D for
+odd D), and the dense operator is always a float matrix.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.base import Rule, register
+from repro.analysis.findings import ERROR, Finding
+from repro.analysis.walker import _is_float_dtype, find_avals
+
+
+class NoDenseMixing(Rule):
+    id = "no-dense-mixing"
+    doc = ("sparse-path programs materialize no float [D, D] / [*, D, D] "
+           "operator")
+
+    def applies(self, program) -> bool:
+        return bool(program.meta.get("sparse_path"))
+
+    def check(self, program) -> List[Finding]:
+        D = int(program.meta["num_peers"])
+
+        def match(aval) -> bool:
+            shape = tuple(getattr(aval, "shape", ()))
+            if not (shape == (D, D)
+                    or (len(shape) == 3 and shape[1:] == (D, D))):
+                return False
+            dtype = getattr(aval, "dtype", None)
+            return dtype is None or _is_float_dtype(dtype)
+
+        findings = []
+        for site, aval in find_avals(program.jaxpr, match, max_sites=3):
+            findings.append(self.finding(
+                ERROR, program, site.pretty_path,
+                f"float {tuple(aval.shape)} {aval.dtype} materialized — "
+                f"dense O(D²) mixing operator on the sparse path "
+                f"(D={D})"))
+        return findings
+
+
+register(NoDenseMixing())

@@ -1,0 +1,63 @@
+"""no-host-transfer: nothing inside the compiled training loop may round-
+trip through the host.
+
+``run_rounds`` exists to eliminate per-round host dispatch — one jitted
+scan, on-device metric buffers, zero ``float()`` syncs. A callback or
+device transfer primitive inside a scan/while body reintroduces a host
+round-trip EVERY iteration and silently destroys that: ERROR. Callbacks
+outside loop bodies still stall the program once per call: WARNING.
+
+Motivating example (the bug class this rule pins): ``np.asarray(ids)`` on
+a traced value — e.g. passing traced ``cluster_ids`` into
+``protocols.base._groups_from_ids`` or ``make_context`` without an
+explicit ``num_clusters``. Pure-Python coercion of a tracer cannot become
+a program equation at all, so those sites now raise a clear ``TypeError``
+at trace time; had they been "fixed" with a callback instead, this rule
+is what would catch the loop-carried host sync.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.base import Rule, register
+from repro.analysis.findings import ERROR, WARNING, Finding
+from repro.analysis.walker import iter_eqns
+
+#: primitives that synchronize with or execute on the host
+HOST_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "host_callback",
+    "callback", "infeed", "outfeed", "device_put",
+})
+
+
+class NoHostTransfer(Rule):
+    id = "no-host-transfer"
+    doc = "no callbacks / device transfers inside compiled loop bodies"
+
+    def check(self, program) -> List[Finding]:
+        findings: List[Finding] = []
+        for site in iter_eqns(program.jaxpr):
+            name = site.eqn.primitive.name
+            if name not in HOST_PRIMS:
+                continue
+            if name == "device_put":
+                # devices=[None] is a placement-free alias (what
+                # jnp.asarray on a traced value stages) — no transfer
+                # happens; only a COMMITTED placement moves bytes.
+                devices = site.eqn.params.get("devices", ())
+                if not any(d is not None for d in devices):
+                    continue
+            if site.in_loop:
+                findings.append(self.finding(
+                    ERROR, program, site.pretty_path,
+                    f"{name} inside a compiled loop body — a host "
+                    f"round-trip every iteration"))
+            elif name != "device_put":
+                findings.append(self.finding(
+                    WARNING, program, site.pretty_path,
+                    f"{name} in a compiled program stalls the device on "
+                    f"the host"))
+        return findings
+
+
+register(NoHostTransfer())

@@ -1,0 +1,72 @@
+"""scan-carry-stability: the training loop's carry must be a fixed-layout
+buffer, not a per-iteration rebuild.
+
+Two checks over every ``lax.scan`` in a program:
+
+* **stability** — each carry slot's (shape, dtype) is identical between
+  the scan's carry-in avals and the body's carry-out avals (ERROR), and
+  its weak-type flag doesn't flip (WARNING — a silent promotion means the
+  body inserts a convert every iteration). The engines' entire O(1)-host
+  training story rides on the packed [D, Σsizes] carry staying put.
+
+* **re-packing** — a carry output produced directly by ``concatenate``
+  (ndim >= 2) means the body tears the packed buffer apart and re-packs
+  it every iteration instead of updating it in place — the exact
+  regression the packed-state engine (PR 5) removed (WARNING). 1-D
+  concatenates are exempt: ``mean_packed``'s per-leaf consensus readout
+  legitimately rebuilds the [Σsizes] global row once per round.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.base import Rule, register
+from repro.analysis.findings import ERROR, WARNING, Finding
+from repro.analysis.walker import _open, iter_eqns
+
+
+class ScanCarryStability(Rule):
+    id = "scan-carry-stability"
+    doc = ("scan carries keep shape/dtype/weak-type and are not re-packed "
+           "per iteration")
+
+    def check(self, program) -> List[Finding]:
+        findings: List[Finding] = []
+        for site in iter_eqns(program.jaxpr):
+            if site.eqn.primitive.name != "scan":
+                continue
+            p = site.eqn.params
+            nc, nk = int(p["num_consts"]), int(p["num_carry"])
+            body = _open(p["jaxpr"])
+            carry_in = [v.aval for v in site.eqn.invars[nc:nc + nk]]
+            carry_out = [v.aval for v in body.outvars[:nk]]
+            where = site.pretty_path
+            for i, (a, b) in enumerate(zip(carry_in, carry_out)):
+                if (tuple(a.shape) != tuple(b.shape)
+                        or a.dtype != b.dtype):
+                    findings.append(self.finding(
+                        ERROR, program, where,
+                        f"carry slot {i} unstable across iterations: "
+                        f"{a.str_short()} in, {b.str_short()} out"))
+                elif (getattr(a, "weak_type", False)
+                        != getattr(b, "weak_type", False)):
+                    findings.append(self.finding(
+                        WARNING, program, where,
+                        f"carry slot {i} flips weak_type "
+                        f"({a.weak_type} -> {b.weak_type}): the body "
+                        f"re-converts it every iteration"))
+            carry_vars = {id(v) for v in body.outvars[:nk]}
+            for eqn in body.eqns:
+                if eqn.primitive.name != "concatenate":
+                    continue
+                out = eqn.outvars[0]
+                if id(out) in carry_vars and getattr(out.aval, "ndim", 0) >= 2:
+                    findings.append(self.finding(
+                        WARNING, program, where,
+                        f"carry {tuple(out.aval.shape)} is rebuilt by "
+                        f"concatenate every iteration — update the packed "
+                        f"buffer in place instead of re-packing it"))
+        return findings
+
+
+register(ScanCarryStability())

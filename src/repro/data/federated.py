@@ -16,7 +16,7 @@ with masks so the simulator can vmap over clients.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 

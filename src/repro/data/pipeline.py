@@ -3,7 +3,7 @@ shardings (single-host multi-device; a multi-host deployment would swap the
 device_put for per-host shard placement behind the same iterator API)."""
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import jax
 import numpy as np

@@ -81,7 +81,12 @@ def mean_packed(flat: jnp.ndarray, spec: TreeSpec) -> jnp.ndarray:
     that leaf's own dtype (exactly what ``tree.map(mean, unpack_tree(...))``
     computes — a bf16 leaf accumulates in bf16, not in the promoted buffer
     dtype) and the result is re-promoted to the buffer dtype. Uniform
-    trees take the single whole-buffer reduction fast path."""
+    trees take the single whole-buffer reduction fast path.
+
+    The mixed-dtype path rebuilds the 1-D [sum(sizes)] consensus row with
+    ``concatenate`` once per call; the ``scan-carry-stability`` auditor
+    rule (``repro.analysis``) exempts 1-D concatenates for exactly this
+    readout — only >=2-D carry re-packing is flagged."""
     if all(dt == flat.dtype for dt in spec.dtypes):
         return jnp.mean(flat, axis=0)
     outs, off = [], 0
@@ -154,7 +159,9 @@ def fed_mix_segment(cluster_ids, w_new, w_old, x_new, x_old, *,
     """Structured-sparse mixing for cluster-segment ``MixingSpec``s on
     [D, P] flat params: per-cluster sums of the weighted rows gathered back
     to member rows — O(D·P) FLOPs vs the dense path's O(D²·P), and no
-    [D, D] operator is ever materialized."""
+    [D, D] operator is ever materialized (machine-checked: the
+    ``no-dense-mixing`` rule in ``repro.analysis`` probes every
+    sparse-path program for float [D, D] avals)."""
     use = on_tpu() if use_pallas is None else use_pallas
     if not use:
         return ref.fed_mix_segment_ref(cluster_ids, w_new, w_old,

@@ -217,8 +217,8 @@ def _lower_sparse_mix(proto, fl, D: int, n_params: int) -> dict:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.analysis.walker import materializes_shape
     from repro.protocols import apply_spec_flat, make_context
-    from repro.protocols.spec import jaxpr_materializes_shape
 
     ids = proto.mesh_cluster_ids(D, fl)
 
@@ -244,7 +244,7 @@ def _lower_sparse_mix(proto, fl, D: int, n_params: int) -> dict:
     return {"mix_path_lowered": "sparse",
             "sparse_mix_available": True,
             "sparse_mix_no_dense_matrix":
-                not jaxpr_materializes_shape(jaxpr, (D, D)),
+                not materializes_shape(jaxpr, (D, D)),
             # analytic per-round mixing cost (the jaxpr cost model does not
             # price segment/gather ops): weighted combine + segment reduce
             # + gather-broadcast ~ O(D·n), vs the dense oracle's two

@@ -17,7 +17,7 @@ in the report for reference.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
@@ -172,56 +172,43 @@ def _conv_flops(eqn) -> float:
     return 2.0 * float(out.size) * kernel
 
 
+def _eqn_cost(eqn):
+    """Per-equation (flops, bytes) contributions, as an ORDERED list of
+    separate adds — float addition is not associative, and the fold must
+    reproduce the historical ``flops += ...; byts += ...; byts += ...``
+    accumulation bit-for-bit."""
+    prim = eqn.primitive.name
+    if prim == "dot_general":
+        return [(_dot_flops(eqn), sum(_aval_bytes(v.aval)
+                                      for v in eqn.invars)),
+                (0.0, _aval_bytes(eqn.outvars[0].aval))]
+    if prim == "conv_general_dilated":
+        return [(_conv_flops(eqn), sum(_aval_bytes(v.aval)
+                                       for v in eqn.invars)),
+                (0.0, _aval_bytes(eqn.outvars[0].aval))]
+    if prim in _BYTES_OPS:
+        return [(0.0, _aval_bytes(eqn.outvars[0].aval)),
+                (0.0, _aval_bytes(eqn.invars[0].aval)
+                 if prim == "concatenate" else 0.0)]
+    return [(0.0, 0.0)]
+
+
 def jaxpr_cost(jaxpr) -> Tuple[float, float]:
-    """(flops, hbm_bytes) with scan bodies multiplied by trip count."""
-    flops = 0.0
-    byts = 0.0
-    for eqn in jaxpr.eqns:
-        prim = eqn.primitive.name
-        if prim == "dot_general":
-            flops += _dot_flops(eqn)
-            byts += sum(_aval_bytes(v.aval) for v in eqn.invars)
-            byts += _aval_bytes(eqn.outvars[0].aval)
-        elif prim == "conv_general_dilated":
-            flops += _conv_flops(eqn)
-            byts += sum(_aval_bytes(v.aval) for v in eqn.invars)
-            byts += _aval_bytes(eqn.outvars[0].aval)
-        elif prim in _BYTES_OPS:
-            byts += _aval_bytes(eqn.outvars[0].aval)
-            byts += _aval_bytes(eqn.invars[0].aval) if prim == "concatenate" \
-                else 0.0
-        elif prim == "scan":
-            f, b = jaxpr_cost(eqn.params["jaxpr"].jaxpr)
-            n = eqn.params["length"]
-            flops += n * f
-            byts += n * b
-        elif prim == "shard_map":
-            # body shapes are PER-SHARD; every device executes it
-            sub = eqn.params["jaxpr"]
-            f, b = jaxpr_cost(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
-            n = int(eqn.params["mesh"].size)
-            flops += n * f
-            byts += n * b
-        elif prim == "while":
-            f, b = jaxpr_cost(eqn.params["body_jaxpr"].jaxpr)
-            flops += f          # trip count unknown; rare in our programs
-            byts += b
-        elif prim == "cond":
-            costs = [jaxpr_cost(br.jaxpr) for br in eqn.params["branches"]]
-            flops += max(c[0] for c in costs)
-            byts += max(c[1] for c in costs)
-        else:
-            sub = None
-            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
-                if key in eqn.params:
-                    sub = eqn.params[key]
-                    break
-            if sub is not None:
-                sj = sub.jaxpr if hasattr(sub, "jaxpr") else sub
-                f, b = jaxpr_cost(sj)
-                flops += f
-                byts += b
-    return flops, byts
+    """(flops, hbm_bytes) with scan bodies multiplied by trip count.
+
+    Compatibility shim on the shared IR walker
+    (``repro.analysis.walker.fold``): the loop semantics — scan body x
+    trip count, shard_map body x mesh size (per-shard shapes; every
+    device executes it), while body once (trip count unknown; rare in our
+    programs), cond branches componentwise-max — now live in ONE place
+    shared with every ``repro.analysis`` rule."""
+    from repro.analysis.walker import fold
+    return fold(
+        jaxpr, _eqn_cost,
+        add=lambda a, b: (a[0] + b[0], a[1] + b[1]),
+        scale=lambda v, n: (n * v[0], n * v[1]),
+        alt=lambda a, b: (max(a[0], b[0]), max(a[1], b[1])),
+        zero=(0.0, 0.0))
 
 
 def program_cost(fn, *args) -> Tuple[float, float]:

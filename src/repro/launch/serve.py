@@ -8,13 +8,12 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ServeConfig
 from repro.configs import get_config
 from repro.launch.steps import build_decode_step, build_prefill_step
 from repro.models.model import build_model

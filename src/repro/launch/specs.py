@@ -8,7 +8,7 @@ mixed token ids (its VQ frontend emits ordinary vocab ids).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,12 +9,12 @@
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, TrainConfig
+from repro.config import TrainConfig
 from repro.models.model import Model
 from repro.optim import make_optimizer
 from repro.optim.optimizers import apply_updates, clip_by_global_norm

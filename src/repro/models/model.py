@@ -14,7 +14,7 @@ ten architectures. Batch schemas:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict
 
 import jax.numpy as jnp
 

@@ -10,7 +10,7 @@ Learning rates may be floats or schedules (callables of the int step).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Union
+from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp

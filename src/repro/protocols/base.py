@@ -54,7 +54,8 @@ from repro.core.comm_model import CommParams
 from repro.kernels import ops as kernel_ops
 from repro.core.partition import sample_participants
 from repro.core.topology import Topology
-from repro.protocols.context import RoundContext, make_context  # noqa: F401
+from repro.protocols.context import (  # noqa: F401
+    RoundContext, concrete_cluster_ids, make_context)
 from repro.sharding.compat import shard_map
 
 
@@ -229,14 +230,24 @@ class Protocol:
         """axis_index_groups (one group per cluster) from a static [D]
         assignment. Raises on traced ids — mesh lowerings need a concrete
         cluster layout."""
-        ids = np.asarray(cluster_ids)
+        ids = concrete_cluster_ids(
+            cluster_ids,
+            hint="psum_mix axis_index_groups need a CONCRETE [D] cluster "
+                 "assignment; got a traced cluster_ids. Mesh engines must "
+                 "close over the static assignment (numpy array) rather "
+                 "than thread it through jit.")
         L = int(ids.max()) + 1 if ids.size else 1
         return [np.nonzero(ids == c)[0].tolist() for c in range(L)]
 
     @staticmethod
     def static_num_clients(ctx: RoundContext) -> int:
         """D as a static int, from the concrete mesh cluster assignment."""
-        return int(np.asarray(ctx.cluster_ids).shape[0])
+        ids = concrete_cluster_ids(
+            ctx.cluster_ids,
+            hint="static_num_clients needs a concrete cluster_ids array; "
+                 "got a traced value (mesh contexts close over the static "
+                 "assignment).")
+        return int(ids.shape[0])
 
 
 # ---------------------------------------------------------------------------

@@ -84,6 +84,23 @@ jax.tree_util.register_dataclass(
 )
 
 
+def concrete_cluster_ids(cluster_ids, *, hint: str) -> np.ndarray:
+    """``np.asarray(cluster_ids)``, but with a clear ``TypeError`` on tracers.
+
+    Cluster assignments are *static* structure on every path that consumes
+    them in Python (``num_clusters`` inference here, ``axis_index_groups``
+    construction in ``protocols.base``). Coercing a traced array with
+    ``np.asarray`` used to die deep inside numpy with an opaque
+    ``ConcretizationTypeError``; this helper raises at the call site with a
+    ``hint`` explaining what the caller actually needs. See the
+    ``no-host-transfer`` rule in ``repro.analysis`` for why the alternative
+    (a callback) would be worse.
+    """
+    if isinstance(cluster_ids, jax.core.Tracer):
+        raise TypeError(hint)
+    return np.asarray(cluster_ids)
+
+
 def make_context(*, key=None, round_index=0, survive=None, counts=None,
                  cluster_ids=None, num_clusters: Optional[int] = None,
                  do_global_sync: bool = True, topology: Optional[Topology] = None,
@@ -119,12 +136,10 @@ def make_context(*, key=None, round_index=0, survive=None, counts=None,
     if cluster_ids is None:
         cluster_ids = jnp.zeros((D,), jnp.int32)
     if num_clusters is None:
-        try:
-            ids = np.asarray(cluster_ids)
-        except Exception as e:      # traced ids can't imply the static L
-            raise ValueError(
-                "num_clusters must be passed explicitly when cluster_ids is "
-                "a traced array (it is a static shape parameter)") from e
+        ids = concrete_cluster_ids(
+            cluster_ids,
+            hint="num_clusters must be passed explicitly when cluster_ids "
+                 "is a traced array (it is a static shape parameter)")
         num_clusters = int(ids.max()) + 1 if ids.size else 1
     return RoundContext(
         key=key, round_index=jnp.asarray(round_index, jnp.int32),

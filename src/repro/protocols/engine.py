@@ -298,6 +298,64 @@ class DenseEngine:
         return params_out, out[1], out[2]
 
     # -- the scan-compiled training loop -------------------------------
+
+    #: argnums of ``_build_run``'s closure that ``run_rounds`` donates on
+    #: accelerators: the freshly-packed flat carry (invar 0). The
+    #: donation-integrity analysis rule audits this contract.
+    _donate_argnums = (0,)
+
+    def _build_run(self, spec, T: int, eval_every: int):
+        """The un-jitted T-round program ``run(flat, key)`` behind
+        ``run_rounds`` — exposed so ``repro.analysis`` can trace the full
+        scan-compiled training loop (``jax.make_jaxpr``) without executing
+        it. ``spec`` is the TreeSpec of the packed carry the closure
+        captures; arg 0 is the donation target (``_donate_argnums``)."""
+
+        def eval_at(flat, t):
+            p = kernel_ops.unpack_tree(flat, spec)
+            if eval_every == 1:
+                return self._eval(p)
+            return jax.lax.cond(
+                jnp.logical_or((t + 1) % eval_every == 0, t == T - 1),
+                self._eval,
+                lambda _: (jnp.zeros(()), jnp.zeros(())), p)
+
+        if self.codec is None:
+            def body(carry, t):
+                flat, key = carry
+                key, kr = jax.random.split(key)
+                flat, loss = self._round_flat(spec, flat, kr, t)
+                acc_w, acc_m = eval_at(flat, t)
+                return (flat, key), (loss, acc_w, acc_m)
+
+            def run(flat, key):
+                (flat, _), (loss, acc_w, acc_m) = jax.lax.scan(
+                    body, (flat, key), jnp.arange(T))
+                return kernel_ops.unpack_tree(flat, spec), {
+                    "train_loss": loss, "acc": acc_w,
+                    "acc_client_mean": acc_m}
+        else:
+            # error-feedback residuals (stateful codecs) ride the scan
+            # carry as one [P, sum(sizes)] f32 buffer per participant
+            # slot; stateless codecs carry None (an empty pytree).
+            def body(carry, t):
+                flat, key, cstate = carry
+                key, kr = jax.random.split(key)
+                flat, loss, cstate = self._round_flat(spec, flat, kr, t,
+                                                      cstate)
+                acc_w, acc_m = eval_at(flat, t)
+                return (flat, key, cstate), (loss, acc_w, acc_m)
+
+            def run(flat, key):
+                cstate = self._init_codec_state_flat(flat)
+                (flat, _, _), (loss, acc_w, acc_m) = jax.lax.scan(
+                    body, (flat, key, cstate), jnp.arange(T))
+                return kernel_ops.unpack_tree(flat, spec), {
+                    "train_loss": loss, "acc": acc_w,
+                    "acc_client_mean": acc_m}
+
+        return run
+
     def run_rounds(self, params, key, T: int, eval_every: int = 1):
         """Run T rounds as ONE compiled ``lax.scan`` program over the
         PACKED carry: the global model is packed into its flat
@@ -323,54 +381,12 @@ class DenseEngine:
         # width and would otherwise unpack each other's column slices
         cache_key = (T, eval_every, spec)
         if cache_key not in self._run_cache:
-
-            def eval_at(flat, t):
-                p = kernel_ops.unpack_tree(flat, spec)
-                if eval_every == 1:
-                    return self._eval(p)
-                return jax.lax.cond(
-                    jnp.logical_or((t + 1) % eval_every == 0, t == T - 1),
-                    self._eval,
-                    lambda _: (jnp.zeros(()), jnp.zeros(())), p)
-
-            if self.codec is None:
-                def body(carry, t):
-                    flat, key = carry
-                    key, kr = jax.random.split(key)
-                    flat, loss = self._round_flat(spec, flat, kr, t)
-                    acc_w, acc_m = eval_at(flat, t)
-                    return (flat, key), (loss, acc_w, acc_m)
-
-                def run(flat, key):
-                    (flat, _), (loss, acc_w, acc_m) = jax.lax.scan(
-                        body, (flat, key), jnp.arange(T))
-                    return kernel_ops.unpack_tree(flat, spec), {
-                        "train_loss": loss, "acc": acc_w,
-                        "acc_client_mean": acc_m}
-            else:
-                # error-feedback residuals (stateful codecs) ride the scan
-                # carry as one [P, sum(sizes)] f32 buffer per participant
-                # slot; stateless codecs carry None (an empty pytree).
-                def body(carry, t):
-                    flat, key, cstate = carry
-                    key, kr = jax.random.split(key)
-                    flat, loss, cstate = self._round_flat(spec, flat, kr, t,
-                                                          cstate)
-                    acc_w, acc_m = eval_at(flat, t)
-                    return (flat, key, cstate), (loss, acc_w, acc_m)
-
-                def run(flat, key):
-                    cstate = self._init_codec_state_flat(flat)
-                    (flat, _, _), (loss, acc_w, acc_m) = jax.lax.scan(
-                        body, (flat, key, cstate), jnp.arange(T))
-                    return kernel_ops.unpack_tree(flat, spec), {
-                        "train_loss": loss, "acc": acc_w,
-                        "acc_client_mean": acc_m}
-
+            run = self._build_run(spec, T, eval_every)
             # the flat carry is ours (freshly packed) — donate it so the
             # scan state aliases the input buffer instead of copying it
             # (accelerators only: XLA:CPU can't alias and would just warn)
-            donate = () if jax.default_backend() == "cpu" else (0,)
+            donate = (() if jax.default_backend() == "cpu"
+                      else self._donate_argnums)
             self._run_cache[cache_key] = jax.jit(run, donate_argnums=donate)
         return self._run_cache[cache_key](flat0, key)
 

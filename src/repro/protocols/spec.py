@@ -105,48 +105,15 @@ MixingSpec = (SegmentSpec, MatchingSpec)
 
 def jaxpr_materializes_shape(closed_jaxpr, shape: Tuple[int, ...],
                              floating_only: bool = True) -> bool:
-    """True if any equation in the jaxpr (recursively, through scan/cond/
-    pjit sub-jaxprs) produces or consumes an array of exactly ``shape`` —
-    the O(D²) smoking gun the sparse path's no-[D, D] guarantee is pinned
-    against (dryrun artifacts and tests/test_mixing_spec.py).
-
-    ``floating_only`` (the default) restricts the probe to float dtypes:
-    the dense mixing operator is always a float matrix, while legitimate
-    O(D) index structures can coincide with the shape (gossip_async's
-    [R, D] int32 partner stack has R == D for odd D). A float coincidence
-    — a model whose packed width happens to equal D — would still trip
-    the probe; pick shapes/widths accordingly when asserting."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    shape = tuple(shape)
-
-    def matches(aval):
-        if tuple(getattr(aval, "shape", ())) != shape:
-            return False
-        dtype = getattr(aval, "dtype", None)
-        return (not floating_only or dtype is None
-                or jnp.issubdtype(dtype, jnp.floating))
-
-    def subjaxprs(eqn):
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (list, tuple)) else (v,)
-            for u in vs:
-                if isinstance(u, ClosedJaxpr):
-                    yield u.jaxpr
-                elif isinstance(u, Jaxpr):
-                    yield u
-
-    def walk(jaxpr) -> bool:
-        for eqn in jaxpr.eqns:
-            for v in list(eqn.invars) + list(eqn.outvars):
-                aval = getattr(v, "aval", None)
-                if aval is not None and matches(aval):
-                    return True
-            if any(walk(sub) for sub in subjaxprs(eqn)):
-                return True
-        return False
-
-    return walk(closed_jaxpr.jaxpr)
+    """Compatibility shim: the shape probe now lives on the shared IR
+    walker (``repro.analysis.walker.materializes_shape``), the same
+    traversal every ``repro.analysis`` rule uses. See that function for
+    the full semantics (recursive through every sub-jaxpr; float-only by
+    default because the dense mixing operator is always a float matrix
+    while O(D) index structures can coincide with the shape)."""
+    from repro.analysis.walker import materializes_shape
+    return materializes_shape(closed_jaxpr, shape,
+                              floating_only=floating_only)
 
 
 def mix_flat_spec(spec, flat_new, flat_old, *, use_pallas=None,

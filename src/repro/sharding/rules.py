@@ -29,7 +29,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.config import MeshConfig, ModelConfig
+from repro.config import ModelConfig
 
 
 @dataclass(frozen=True)

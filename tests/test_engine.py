@@ -120,7 +120,7 @@ def test_make_context_traced_cluster_ids_requires_num_clusters():
     def bad(cids):
         return make_context(cluster_ids=cids).num_clusters
 
-    with pytest.raises(ValueError, match="num_clusters must be passed"):
+    with pytest.raises(TypeError, match="num_clusters must be passed"):
         bad(jnp.array([0, 0, 1, 1], jnp.int32))
 
 

@@ -7,7 +7,7 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypothesis import given
 
 from repro.core.aggregation import (
     cluster_models, cluster_then_global, weighted_average,

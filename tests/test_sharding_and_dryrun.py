@@ -1,16 +1,11 @@
 """Sharding-rule units + a small-mesh end-to-end dry-run in a subprocess
 (8 forced host devices so smoke tests elsewhere keep seeing 1 device)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import jax
-import numpy as np
-import pytest
-
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.sharding.rules import choose_strategy
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")

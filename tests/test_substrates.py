@@ -9,7 +9,7 @@ import pytest
 
 from repro.config import TrainConfig
 from repro.data.federated import (
-    char_lm_federated, pseudo_femnist_federated, pseudo_mnist_federated,
+    char_lm_federated, pseudo_mnist_federated,
 )
 from repro.data.lm import token_stream_batches
 from repro.data.synthetic import syncov, synlabel
