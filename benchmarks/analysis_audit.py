@@ -6,6 +6,10 @@ process that already imported jax cannot do — and emits the audit summary
 as rows so ``BENCH_*.json`` tracks the audited-program surface over PRs.
 The quick pass audits the dense engine only; ``--full`` audits both
 engines across the default codec set, same as the gating CI step.
+
+ERROR findings (rule violations or contract-diff regressions) RAISE after
+row-ification, so ``benchmarks/run.py --only analysis`` exits nonzero
+exactly when the CI gate would — local runs and CI agree.
 """
 from __future__ import annotations
 
@@ -19,11 +23,14 @@ _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run(quick: bool = True):
-    out = os.path.join(tempfile.mkdtemp(prefix="repro-analysis-"),
-                       "ANALYSIS.json")
-    cmd = [sys.executable, "-m", "repro.analysis", "--out", out]
+    tmp = tempfile.mkdtemp(prefix="repro-analysis-")
+    out = os.path.join(tmp, "ANALYSIS.json")
+    # keep the default --rounds so program names line up with the
+    # checked-in contracts baseline (names embed the trip count)
+    cmd = [sys.executable, "-m", "repro.analysis", "--out", out,
+           "--diff-out", os.path.join(tmp, "CONTRACTS_DIFF.md")]
     if quick:
-        cmd += ["--engine", "dense", "--codec", "none", "--rounds", "2"]
+        cmd += ["--engine", "dense", "--codec", "none"]
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(_REPO, "src"), env.get("PYTHONPATH"))
@@ -39,11 +46,24 @@ def run(quick: bool = True):
     sev = {}
     for f in doc["findings"]:
         sev[f["severity"]] = sev.get(f["severity"], 0) + 1
-    return [
+    diff = doc.get("contract_diff") or {}
+    rows = [
         ("analysis/programs", float(len(doc["programs"])), ""),
         ("analysis/rules", float(len(doc["rules"])), ""),
         ("analysis/errors", float(doc["num_errors"]), ""),
         ("analysis/warnings", float(sev.get("WARNING", 0)), ""),
+        ("analysis/contracts_compared", float(diff.get("compared", 0)), ""),
+        ("analysis/contract_regressions",
+         float(sum(1 for r in diff.get("rows", ())
+                   if r.get("gate") == "ERROR")), ""),
         ("analysis/ok", float(doc["ok"] and proc.returncode == 0),
          f"exit={proc.returncode}"),
     ]
+    if doc["num_errors"] or proc.returncode != 0:
+        errs = [f"{f['rule']} :: {f['program']}: {f['message']}"
+                for f in doc["findings"] if f["severity"] == "ERROR"]
+        raise RuntimeError(
+            f"analysis audit failed (exit {proc.returncode}, "
+            f"{doc['num_errors']} error finding(s)):\n  "
+            + "\n  ".join(errs[:5] or [proc.stderr[-500:]]))
+    return rows

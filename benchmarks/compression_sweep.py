@@ -22,7 +22,7 @@ from typing import Dict
 
 import jax
 
-from repro import compression, protocols
+from repro import compression
 from repro.config import FLConfig
 from repro.configs.paper_models import LOGREG_MNIST, LOGREG_SYN
 from repro.core.comm_model import CommParams, min_h_fedp2p
@@ -57,12 +57,11 @@ def run(quick: bool = True, rounds: int = 0):
                       devices_per_cluster=2, participation=10,
                       local_epochs=5, batch_size=10, lr=0.05)
         sim = Simulator(net, data, fl)
-        n_params = sum(int(l.size)
-                       for l in jax.tree.leaves(sim.init_params(0)))
+        n_params = sum(int(leaf.size)
+                       for leaf in jax.tree.leaves(sim.init_params(0)))
         p_full = CommParams(4.0 * n_params, SERVER_BW, SERVER_BW / GAMMA,
                             ALPHA)
         for algo in algos:
-            proto = protocols.get(algo)
             base = sim.run(rounds=R, algorithm=algo, seed=0, codec="none")
             for cname in codecs:
                 codec = compression.get(cname)

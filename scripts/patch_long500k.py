@@ -1,8 +1,8 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-import json, sys
+import json
+
 from repro.launch.dryrun import dryrun_one
-from repro.configs import ARCH_IDS
 
 for fname, multi in (("results/dryrun_single.json", False),
                      ("results/dryrun_multi.json", True)):

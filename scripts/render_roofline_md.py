@@ -1,7 +1,6 @@
 """Render EXPERIMENTS.md roofline tables from the dry-run JSON artifacts."""
 import json
 import os
-import sys
 
 
 def fmt(rows, title):

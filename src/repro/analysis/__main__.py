@@ -9,11 +9,17 @@ if "xla_force_host_platform_device_count" not in _flags:
 """Audit every registered protocol's compiled programs on both engines.
 
   PYTHONPATH=src python -m repro.analysis --protocol all --engine both \
-      --mix-path auto --codec none,int8
+      --mix-path both --codec none,int8
 
 Traces one-round and T-round programs for each (protocol, codec) on the
-requested engines, runs every registered rule, prints the findings table,
-writes ANALYSIS.json, and exits nonzero on ERROR findings — the CI gate.
+requested engines, runs every registered rule, derives each program's
+static CONTRACT (collective census, wire bytes, flops, peak live bytes,
+scan-carry layout — ``repro.analysis.contracts``), diffs the contracts
+against the checked-in ``contracts/baseline.json`` snapshot, prints the
+findings table, writes ANALYSIS.json + CONTRACTS_DIFF.md, and exits
+nonzero on ERROR findings — the CI gate. ``--update-baseline``
+regenerates the snapshot after an intentional change; ``--list-rules``
+and ``--rule ID`` inspect / run individual rules.
 """
 import argparse
 import sys
@@ -23,15 +29,17 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="static jaxpr auditor for the engines' performance "
-                    "invariants")
+                    "invariants: rule checks + contract snapshot diffing")
     ap.add_argument("--protocol", default="all", metavar="NAME[,NAME...]",
                     help="registered protocol name(s), or 'all'")
     ap.add_argument("--engine", choices=("dense", "mesh", "both"),
                     default="both")
-    ap.add_argument("--mix-path", dest="mix_path", default="auto",
-                    choices=("dense", "sparse", "auto"),
-                    help="dense-engine mixing lowering to trace "
-                         "(the mesh engine always lowers grouped psums)")
+    ap.add_argument("--mix-path", dest="mix_path", default="both",
+                    choices=("dense", "sparse", "auto", "both"),
+                    help="dense-engine mixing lowering to trace; 'both' "
+                         "(default) traces dense AND sparse — the "
+                         "baseline's full coverage (the mesh engine always "
+                         "lowers grouped psums)")
     ap.add_argument("--codec", default="none,int8", metavar="NAME[,NAME...]",
                     help="repro.compression codec(s) to lower into the "
                          "programs")
@@ -39,13 +47,29 @@ def main(argv=None) -> int:
                     help="trip count of the T-round run_rounds programs")
     ap.add_argument("--rules", default=None, metavar="ID[,ID...]",
                     help="run only these rules (default: all registered)")
+    ap.add_argument("--rule", action="append", default=None, metavar="ID",
+                    help="run a single rule by id (repeatable; see "
+                         "--list-rules for ids)")
     ap.add_argument("--out", default="ANALYSIS.json",
                     help="JSON artifact path ('' to skip writing)")
-    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="contracts baseline to diff against (default: "
+                         "<repo>/contracts/baseline.json; '' disables the "
+                         "diff)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from this run's contracts "
+                         "instead of diffing (commit the result)")
+    ap.add_argument("--diff-out", dest="diff_out", default="CONTRACTS_DIFF.md",
+                    metavar="PATH",
+                    help="markdown contract-diff table artifact ('' to "
+                         "skip writing)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print every registered rule's id + doc and exit")
     args = ap.parse_args(argv)
 
     from repro import protocols
-    from repro.analysis import base, programs, report
+    from repro.analysis import base, contracts as contracts_mod, programs, \
+        report
 
     if args.list_rules:
         for rule in base.all_rules():
@@ -58,19 +82,50 @@ def main(argv=None) -> int:
     engines = {"dense": ("dense",), "mesh": ("mesh",),
                "both": ("dense", "mesh")}[args.engine]
     codecs = tuple(c.strip() for c in args.codec.split(",") if c.strip())
-    rules = (base.all_rules() if args.rules is None
-             else [base.get(r.strip()) for r in args.rules.split(",")])
+    rule_ids = ([r.strip() for r in args.rules.split(",")]
+                if args.rules else []) + (args.rule or [])
+    rules = base.all_rules() if not rule_ids else [base.get(r)
+                                                   for r in rule_ids]
 
     progs = programs.build_suite(names, engines=engines,
                                  mix_path=args.mix_path, codecs=codecs,
                                  rounds=args.rounds)
     findings = base.run_rules(progs, rules)
+
+    contracts = contracts_mod.build_contracts(progs)
+    baseline_path = (contracts_mod.default_baseline_path()
+                     if args.baseline is None else args.baseline)
+    diff_doc = None
+    if args.update_baseline:
+        contracts_mod.write_baseline(baseline_path, contracts)
+        print(f"wrote baseline {baseline_path} "
+              f"({len(contracts)} contracts)")
+    elif baseline_path and os.path.exists(baseline_path):
+        baseline = contracts_mod.load_baseline(baseline_path)
+        diff_findings, diff_rows = contracts_mod.diff_contracts(
+            contracts, baseline)
+        findings = findings + diff_findings
+        table = contracts_mod.render_diff_table(
+            diff_rows, compared=len(contracts), baseline_path=baseline_path)
+        diff_doc = {"baseline": baseline_path, "compared": len(contracts),
+                    "rows": diff_rows,
+                    "ok": not any(r["gate"] == "ERROR" for r in diff_rows)}
+        if args.diff_out:
+            with open(args.diff_out, "w") as fh:
+                fh.write(table)
+            print(f"wrote {args.diff_out}")
+    elif baseline_path:
+        print(f"no baseline at {baseline_path}; skipping contract diff "
+              "(generate one with --update-baseline)")
+
     print(report.render_table(progs, findings))
     if args.out:
-        doc = report.write_json(args.out, progs, findings, rules)
+        doc = report.write_json(args.out, progs, findings, rules,
+                                contracts=contracts, contract_diff=diff_doc)
         print(f"wrote {args.out}")
     else:
-        doc = report.to_json(progs, findings, rules)
+        doc = report.to_json(progs, findings, rules, contracts=contracts,
+                             contract_diff=diff_doc)
     n_err = doc["num_errors"]
     print(f"{len(progs)} programs, {len(rules)} rules, "
           f"{len(findings)} findings, {n_err} errors")

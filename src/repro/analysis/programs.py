@@ -53,6 +53,12 @@ class Program:
     #   donate_intent  — flat invar indices the engine donates on
     #                    accelerators (donation-integrity applies)
     #   stateful_codec — True for error-feedback codecs (residual carry)
+    #   wire_model     — the protocol's declared §3.2 wire structure for
+    #                    ONE round ((group_size, n_groups, copies) ring
+    #                    terms; () for the network-free dense engine) —
+    #                    wire-model-parity compares the static jaxpr byte
+    #                    count against its CommParams pricing
+    #   model_bytes    — per-client model bytes at full precision (M)
 
 
 # ---------------------------------------------------------------------------
@@ -114,8 +120,13 @@ def dense_programs(protocol: str, *, codec: str = "none",
     params = engine.init_params(0)
     key = jax.random.PRNGKey(0)
     stateful = engine.codec is not None and engine.codec.stateful
+    flat0, spec = engine._pack_params(params)
+    # the simulator is network-free: its declared wire structure is EMPTY,
+    # so wire-model-parity doubles as "the dense path moves zero bytes"
     base_meta = {"num_peers": P, "sparse_path": resolved == "sparse",
-                 "census_budget": {}, "stateful_codec": stateful}
+                 "census_budget": {}, "stateful_codec": stateful,
+                 "wire_model": (),
+                 "model_bytes": float(flat0.size * flat0.dtype.itemsize)}
     out: List[Program] = []
     if "round" in kinds:
         jaxpr = jax.make_jaxpr(engine._round)(params, key)
@@ -125,7 +136,6 @@ def dense_programs(protocol: str, *, codec: str = "none",
             mix_path=resolved, codec=codec, kind="round",
             meta=dict(base_meta, rounds=1)))
     if "run" in kinds:
-        flat0, spec = engine._pack_params(params)
         run = engine._build_run(spec, rounds, 1)
         jaxpr = jax.make_jaxpr(run)(flat0, key)
         out.append(Program(
@@ -219,8 +229,15 @@ def mesh_programs(protocol: str, *, codec: str = "none", rounds: int = 3,
     key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     budget = mesh_budget(proto, fl, D, info, fp)
     stateful = engine._codec_stateful
+    ids = proto.mesh_cluster_ids(D, fl)
+    L = int(ids.max()) + 1
+    model_bytes = float(sum(
+        (leaf.size // D) * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(fp)))      # per-client leaf bytes
     base_meta = {"num_peers": D, "sparse_path": True,
-                 "census_budget": budget, "stateful_codec": stateful}
+                 "census_budget": budget, "stateful_codec": stateful,
+                 "wire_model": proto.wire_model(D, L, do_global_sync=True),
+                 "model_bytes": model_bytes}
     out: List[Program] = []
     if "round" in kinds:
         b1 = {"x": _sds((D, local_steps, batch, F)),
@@ -252,14 +269,21 @@ def mesh_programs(protocol: str, *, codec: str = "none", rounds: int = 3,
 def build_suite(protocol_names=None, *, engines=("dense", "mesh"),
                 mix_path: str = "auto", codecs=("none",), rounds: int = 3
                 ) -> List[Program]:
-    """Every (protocol x codec) program on the requested engines."""
+    """Every (protocol x codec) program on the requested engines.
+
+    ``mix_path='both'`` traces the dense engine through BOTH lowerings
+    (explicit dense and explicit sparse) — the full-coverage suite the
+    contracts baseline snapshots. The mesh engine always lowers grouped
+    psums, so mix_path only fans out the dense suite."""
     names = list(protocol_names) if protocol_names else list(protocols.names())
+    dense_paths = ("dense", "sparse") if mix_path == "both" else (mix_path,)
     out: List[Program] = []
     for name in names:
         for codec in codecs:
             if "dense" in engines:
-                out.extend(dense_programs(name, codec=codec,
-                                          mix_path=mix_path, rounds=rounds))
+                for mp in dense_paths:
+                    out.extend(dense_programs(name, codec=codec,
+                                              mix_path=mp, rounds=rounds))
             if "mesh" in engines:
                 out.extend(mesh_programs(name, codec=codec, rounds=rounds))
     return out

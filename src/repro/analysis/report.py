@@ -29,7 +29,7 @@ def render_table(programs: Sequence, findings: Sequence[Finding]) -> str:
     widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
     lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
              for r in rows]
-    lines.insert(1, "-" * max(len(l) for l in lines))
+    lines.insert(1, "-" * max(len(ln) for ln in lines))
     for f in findings:
         where = f" at {f.where}" if f.where else ""
         lines.append(f"[{f.severity}] {f.rule} :: {f.program}{where}: "
@@ -49,8 +49,9 @@ def _sev_counts(fs: List[Finding]):
 
 
 def to_json(programs: Sequence, findings: Sequence[Finding],
-            rules: Sequence) -> Dict:
-    return {
+            rules: Sequence, *, contracts: Dict = None,
+            contract_diff: Dict = None) -> Dict:
+    doc = {
         "programs": [{
             "name": p.name, "engine": p.engine, "protocol": p.protocol,
             "mix_path": p.mix_path, "codec": p.codec, "kind": p.kind,
@@ -59,17 +60,26 @@ def to_json(programs: Sequence, findings: Sequence[Finding],
             "sparse_path": p.meta.get("sparse_path", False),
             "census": p.meta.get("census", {}),
             "census_budget": p.meta.get("census_budget", {}),
+            "wire": p.meta.get("wire"),
+            "peak_live_bytes": p.meta.get("peak_live_bytes"),
         } for p in programs],
         "findings": [f.to_dict() for f in findings],
         "rules": {r.id: r.doc for r in rules},
         "num_errors": sum(1 for f in findings if f.severity == ERROR),
         "ok": not any(f.severity == ERROR for f in findings),
     }
+    if contracts is not None:
+        doc["contracts"] = contracts
+    if contract_diff is not None:
+        doc["contract_diff"] = contract_diff
+    return doc
 
 
 def write_json(path: str, programs: Sequence, findings: Sequence[Finding],
-               rules: Sequence) -> Dict:
-    doc = to_json(programs, findings, rules)
+               rules: Sequence, *, contracts: Dict = None,
+               contract_diff: Dict = None) -> Dict:
+    doc = to_json(programs, findings, rules, contracts=contracts,
+                  contract_diff=contract_diff)
     with open(path, "w") as fh:
         json.dump(doc, fh, indent=1, sort_keys=True)
     return doc

@@ -7,5 +7,5 @@ automatically.
 """
 from repro.analysis.rules import (  # noqa: F401
     collective_census, donation, no_dense_mixing, no_host_transfer,
-    scan_carry,
+    peak_memory, scan_carry, wire_model,
 )

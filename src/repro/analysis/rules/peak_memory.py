@@ -1,0 +1,59 @@
+"""peak-live-bytes: a sparse-path program's estimated peak live memory
+stays within a constant factor of the O(D·n) state it was handed — the
+memory-side twin of ``no-dense-mixing``.
+
+The shape probe catches a [D, D] float operand *at the audited D*; this
+rule catches the budget consequence, which is what actually matters at
+scale: any hidden super-linear temporary (a densified mixing matrix, an
+all-pairs gather, a [D, D] one-hot) makes ``peak_live_bytes`` grow
+quadratically while the inputs grow linearly, so the O(1)-factor budget
+fails loudly at large D no matter what shape the temporary takes.
+
+Budget: ``FACTOR x input bytes + SLACK``. Inputs (invars + closed-over
+constants) ARE the O(D·n) state — packed client stacks, batches, keys;
+the factor covers legitimate same-order temporaries (gradients,
+per-client copies, optimizer scratch), and the additive slack covers
+D-independent bookkeeping on tiny toy programs. Programs may override via
+``meta['peak_budget_bytes']``; the liveness estimator itself is
+``analysis.contracts.peak_live_bytes``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.base import Rule, register
+from repro.analysis.findings import ERROR, Finding
+
+#: legitimate temporaries are O(inputs): grads + copies + scratch
+FACTOR = 4.0
+#: D-independent bookkeeping headroom (tiny toy programs)
+SLACK = 256 * 1024
+
+
+class PeakLiveBytes(Rule):
+    id = "peak-live-bytes"
+    doc = ("sparse-path peak live bytes stay within a constant factor of "
+           "the program's O(D·n) inputs (no super-linear temporaries)")
+
+    def applies(self, program) -> bool:
+        return bool(program.meta.get("sparse_path"))
+
+    def check(self, program) -> List[Finding]:
+        from repro.analysis.contracts import input_bytes, peak_live_bytes
+        peak = peak_live_bytes(program.jaxpr)
+        inputs = input_bytes(program.jaxpr)
+        program.meta["peak_live_bytes"] = peak    # surfaced in ANALYSIS.json
+        budget = program.meta.get("peak_budget_bytes")
+        if budget is None:
+            budget = FACTOR * inputs + SLACK
+        if peak <= budget:
+            return []
+        return [self.finding(
+            ERROR, program, "",
+            f"estimated peak live bytes {peak:g} exceed the O(D·n) budget "
+            f"{budget:g} ({FACTOR:g}x {inputs:g} input bytes + {SLACK} "
+            f"slack) — a super-linear temporary (e.g. a re-materialized "
+            f"[D, D] operator) is live in this program")]
+
+
+register(PeakLiveBytes())

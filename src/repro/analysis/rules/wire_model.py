@@ -1,0 +1,61 @@
+"""wire-model-parity: the bytes a compiled round's collectives put on the
+wire equal EXACTLY what the paper's §3.2 cost model prices for that
+(protocol, codec) — the loop between the traced program and
+``core.comm_model`` is closed, not asserted.
+
+Both sides share one convention (``core.comm_model.ring_wire_bytes``): a
+ring allreduce over a g-device group moves ``2 (g - 1)`` codec-adjusted
+models. The static side sizes every psum from its operands and
+``axis_index_groups`` (``analysis.contracts.collective_wire``); the
+analytic side prices the protocol's DECLARED structure
+(``Protocol.wire_model`` — (group_size, n_groups, model_copies) terms)
+through ``CommParams.wire_bytes``. Codec pricing is symmetric — payload
+operands are logically ``num_params * bits_per_param / 8`` bytes, exactly
+the ``wire_bytes = M * bits / 32`` scaling — so the equality is exact for
+``none`` and ``int8`` alike, not a tolerance band.
+
+Scalar psums (survivor counts, group sizes) are control overhead the §3.2
+model does not price; they are excluded here and pinned by the contract
+snapshot differ instead. Dense-engine programs declare an EMPTY wire model,
+so this rule also certifies the simulator path moves zero bytes.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.base import Rule, register
+from repro.analysis.findings import ERROR, Finding
+
+
+class WireModelParity(Rule):
+    id = "wire-model-parity"
+    doc = ("static collective wire bytes equal the §3.2 CommParams pricing "
+           "of the protocol's declared ring structure (exact, per codec)")
+
+    def applies(self, program) -> bool:
+        return (program.meta.get("wire_model") is not None
+                and "model_bytes" in program.meta)
+
+    def check(self, program) -> List[Finding]:
+        from repro.analysis.contracts import (
+            EXACT_RTOL, analytic_wire_bytes, codec_bits, collective_wire,
+        )
+        wire = collective_wire(program.jaxpr,
+                               bits_per_param=codec_bits(program.codec))
+        program.meta["wire"] = wire           # surfaced in ANALYSIS.json
+        rounds = float(program.meta.get("rounds", 1))
+        expected = rounds * analytic_wire_bytes(
+            program.meta["wire_model"], program.meta["model_bytes"],
+            program.codec)
+        got = wire["payload_bytes"]
+        if abs(got - expected) <= EXACT_RTOL * max(1.0, abs(expected)):
+            return []
+        return [self.finding(
+            ERROR, program, "",
+            f"wire bytes disagree with the §3.2 model: program psums move "
+            f"{got:g} payload bytes, wire_model prices {expected:g} "
+            f"({rounds:g} round(s), codec {program.codec}, "
+            f"M={program.meta['model_bytes']:g})")]
+
+
+register(WireModelParity())

@@ -1,1 +1,1 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.io import latest_step, load_checkpoint, save_checkpoint  # noqa: F401

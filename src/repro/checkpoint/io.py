@@ -92,5 +92,5 @@ def load_checkpoint(ckpt_dir: str, tree_like: Any,
         raise ValueError(
             f"checkpoint/model structure mismatch: {path} holds "
             f"{len(leaves)} leaves, tree_like expects {len(ref_leaves)}")
-    out = treedef.unflatten([np.asarray(l) for l in leaves])
+    out = treedef.unflatten([np.asarray(leaf) for leaf in leaves])
     return out, meta

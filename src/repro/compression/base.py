@@ -229,5 +229,5 @@ def init_feedback_state(codec: Optional[Codec], tree):
     if codec is None or not codec.stateful:
         return None
     return jax.tree.map(
-        lambda l: jnp.zeros((l.shape[0], int(l.size) // l.shape[0]),
-                            jnp.float32), tree)
+        lambda leaf: jnp.zeros((leaf.shape[0], int(leaf.size) // leaf.shape[0]),
+                               jnp.float32), tree)

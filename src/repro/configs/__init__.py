@@ -4,7 +4,6 @@ Arch ids use the assignment's dashed names (e.g. ``nemotron-4-15b``);
 module names use underscores.
 """
 from repro.config import ModelConfig, ShapeConfig
-
 from repro.configs import (
     chameleon_34b,
     dbrx_132b,
@@ -17,8 +16,8 @@ from repro.configs import (
     qwen2_1_5b,
     yi_34b,
 )
-from repro.configs.shapes import SHAPES
 from repro.configs.paper_models import PAPER_NETS  # noqa: F401
+from repro.configs.shapes import SHAPES
 
 _MODULES = (
     nemotron_4_15b, qwen2_1_5b, gemma_2b, yi_34b, dbrx_132b,

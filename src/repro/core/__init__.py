@@ -1,6 +1,6 @@
 # The paper's primary contribution: the FedP2P protocol and its substrates.
-from repro.core.aggregation import weighted_average, cluster_then_global  # noqa: F401
+from repro.core.aggregation import cluster_then_global, weighted_average  # noqa: F401
 from repro.core.comm_model import (  # noqa: F401
-    CommParams, h_fedavg, h_fedp2p, optimal_L, min_h_fedp2p, speedup_R,
+    CommParams, h_fedavg, h_fedp2p, min_h_fedp2p, optimal_L, speedup_R,
 )
 from repro.core.partition import random_partition, topology_partition  # noqa: F401

@@ -107,6 +107,19 @@ def allreduce_time(wire_bytes: float, n: int, bw: float) -> float:
     return 2.0 * (n - 1) / n * wire_bytes / bw
 
 
+def ring_wire_bytes(wire_bytes: float, n: int) -> float:
+    """TOTAL bytes a ring allreduce of one ``wire_bytes`` payload puts on
+    the links of its n-device group: 2 (n-1) M — the byte content of
+    ``allreduce_time`` (n devices each move 2 (n-1)/n * M, so
+    ``allreduce_time == ring_wire_bytes / (n * bw)``). This is the ONE
+    convention shared by the static wire pass (``analysis.contracts``)
+    and each protocol's declared ``wire_model``, so the
+    ``wire-model-parity`` rule compares like with like."""
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) * wire_bytes
+
+
 # ---------------------------------------------------------------------------
 # TPU-pod instantiation (hardware-adaptation reading; v5e constants)
 # ---------------------------------------------------------------------------

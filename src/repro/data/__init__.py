@@ -1,6 +1,6 @@
 from repro.data.federated import (  # noqa: F401
-    FederatedDataset, char_lm_federated, pseudo_mnist_federated,
-    pseudo_femnist_federated,
+    FederatedDataset, char_lm_federated, pseudo_femnist_federated,
+    pseudo_mnist_federated,
 )
-from repro.data.synthetic import syncov, synlabel  # noqa: F401
 from repro.data.lm import token_stream_batches  # noqa: F401
+from repro.data.synthetic import syncov, synlabel  # noqa: F401

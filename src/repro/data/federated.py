@@ -53,8 +53,10 @@ def pack_clients(xs: List[np.ndarray], ys: List[np.ndarray], num_classes: int,
         perm = rng.permutation(n)
         n_te = max(1, int(n * test_frac))
         te, tr = perm[:n_te], perm[n_te:]
-        tr_x.append(x[tr]); tr_y.append(y[tr])
-        te_x.append(x[te]); te_y.append(y[te])
+        tr_x.append(x[tr])
+        tr_y.append(y[tr])
+        te_x.append(x[te])
+        te_y.append(y[te])
 
     def pad(blocks_x, blocks_y):
         n_max = max(len(b) for b in blocks_y)
@@ -114,7 +116,8 @@ def pseudo_mnist_federated(num_clients: int = 1000, classes_per_client: int = 2,
         x = templates[y] + rng.normal(0, noise, (counts[i], dim)).astype(np.float32)
         flip = rng.random(counts[i]) < label_noise
         y = np.where(flip, rng.choice(cls, counts[i]), y)
-        xs.append(x.astype(np.float32)); ys.append(y.astype(np.int32))
+        xs.append(x.astype(np.float32))
+        ys.append(y.astype(np.int32))
     return pack_clients(xs, ys, ncls, seed=seed, max_per_client=256)
 
 
@@ -162,5 +165,6 @@ def char_lm_federated(num_clients: int = 100, seq_len: int = 80,
             s[t] = rng.choice(vocab, p=T[s[t - 1]])
         x = np.stack([s[j:j + seq_len] for j in range(n)])
         y = s[seq_len:seq_len + n]
-        xs.append(x.astype(np.int32)); ys.append(y.astype(np.int32))
+        xs.append(x.astype(np.int32))
+        ys.append(y.astype(np.int32))
     return pack_clients(xs, ys, vocab, seed=seed)

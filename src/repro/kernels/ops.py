@@ -62,17 +62,18 @@ def pack_tree(tree) -> Tuple[jnp.ndarray, TreeSpec]:
                 f"{getattr(leaf, 'shape', ())}); every leaf needs a leading "
                 "[N] client axis")
     n = leaves[0].shape[0]
-    bad = {l.shape[0] for l in leaves if l.shape[0] != n}
+    bad = {leaf.shape[0] for leaf in leaves if leaf.shape[0] != n}
     if bad:
         raise ValueError(
             f"pack_tree: leaves disagree on the leading client axis — got "
             f"N={n} and {sorted(bad)}; all leaves must share one [N, ...] "
             "stacking")
     spec = TreeSpec(treedef,
-                    tuple(l.shape[1:] for l in leaves),
-                    tuple(l.dtype for l in leaves),
-                    tuple(int(l[0].size) for l in leaves))
-    return jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1), spec
+                    tuple(leaf.shape[1:] for leaf in leaves),
+                    tuple(leaf.dtype for leaf in leaves),
+                    tuple(int(leaf[0].size) for leaf in leaves))
+    return jnp.concatenate([leaf.reshape(n, -1) for leaf in leaves],
+                           axis=1), spec
 
 
 def mean_packed(flat: jnp.ndarray, spec: TreeSpec) -> jnp.ndarray:

@@ -185,7 +185,7 @@ def dryrun_protocol(arch: str, algorithm: str = "fedp2p", *,
     mem = compiled.memory_analysis()
     # codec-adjusted analytic §3.2 wire cost of this round on the pod model
     from repro.core.comm_model import tpu_comm_params
-    n_params = sum(int(l.size) for l in jax.tree.leaves(p_shapes))
+    n_params = sum(int(leaf.size) for leaf in jax.tree.leaves(p_shapes))
     cp = tpu_comm_params(4.0 * n_params).with_codec(codec_obj)
     result.update({"ok": True, "protocol": algorithm,
                    "codec": codec_obj.name,

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.models.layers import dense_init, init_mlp, apply_mlp
+from repro.models.layers import apply_mlp, dense_init, init_mlp
 from repro.sharding import shard
 
 
@@ -178,7 +178,6 @@ def moe_ffn_ep(p: Dict, x: jnp.ndarray, cfg: ModelConfig, info
     bsh = _batch_shards(info, B)
     dp_used = info.dp_axes if bsh == info.dp_size else info.dp_axes[-1:]
     bspec = dp_used if len(dp_used) > 1 else (dp_used[0] if bsh > 1 else None)
-    e_loc = cfg.num_experts // tpn
     t_loc = (B // bsh) * S
     sl = t_loc // tpn                      # tokens routed per device
     C_sub = moe_capacity(cfg, sl)

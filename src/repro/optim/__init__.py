@@ -1,6 +1,6 @@
 from repro.optim.optimizers import (  # noqa: F401
-    Optimizer, adamw, momentum, sgd, make_optimizer, clip_by_global_norm,
+    Optimizer, adamw, clip_by_global_norm, make_optimizer, momentum, sgd,
 )
 from repro.optim.schedules import (  # noqa: F401
-    constant_schedule, cosine_schedule, warmup_cosine_schedule, make_schedule,
+    constant_schedule, cosine_schedule, make_schedule, warmup_cosine_schedule,
 )

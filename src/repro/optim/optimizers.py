@@ -74,7 +74,8 @@ def momentum(lr: Schedule, beta: float = 0.9) -> Optimizer:
 def adamw(lr: Schedule, beta1: float = 0.9, beta2: float = 0.95,
           eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"step": jnp.zeros((), jnp.int32),
                 "m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params)}

@@ -20,18 +20,18 @@ is one file defining a Protocol subclass plus one ``register`` call, even a
 stochastic one (``gossip_async`` draws a fresh random matching from
 ``ctx.key`` every round).
 """
+from repro.protocols.async_gossip import AsyncGossip
 from repro.protocols.base import (  # noqa: F401
     Protocol, get, names, register, resolve, unregister,
 )
 from repro.protocols.context import RoundContext, make_context  # noqa: F401
-from repro.protocols.spec import (  # noqa: F401
-    MatchingSpec, MixingSpec, SegmentSpec, apply_spec_flat, apply_spec_tree,
-)
-from repro.protocols.async_gossip import AsyncGossip
 from repro.protocols.engine import DenseEngine, MeshEngine  # noqa: F401
 from repro.protocols.fedavg import FedAvg
 from repro.protocols.fedp2p import FedP2P
 from repro.protocols.gossip import DecentralizedGossip
+from repro.protocols.spec import (  # noqa: F401
+    MatchingSpec, MixingSpec, SegmentSpec, apply_spec_flat, apply_spec_tree,
+)
 from repro.protocols.topology_aware import TopologyAwareFedP2P
 
 register(FedAvg())

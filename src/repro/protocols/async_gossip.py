@@ -199,3 +199,11 @@ class AsyncGossip(Protocol):
         link. No server term, no dependence on P. Prices codec-adjusted
         wire bytes."""
         return allreduce_time(p.wire_bytes, 2, p.device_bw)
+
+    def wire_model(self, D: int, L: int, *, do_global_sync: bool = True):
+        """One matching per round: D // 2 pairs, each a 2-device ring
+        moving one effective model. EVERY matching in the round-robin
+        1-factorization has exactly D // 2 pairs (the bye is a singleton),
+        so the lax.switch branches all move the same bytes and the
+        alternative-max static count is exact, not an upper bound."""
+        return ((2, D // 2, 1.0),)

@@ -51,9 +51,9 @@ import numpy as np
 
 from repro.config import FLConfig
 from repro.core.comm_model import CommParams
-from repro.kernels import ops as kernel_ops
 from repro.core.partition import sample_participants
 from repro.core.topology import Topology
+from repro.kernels import ops as kernel_ops
 from repro.protocols.context import (  # noqa: F401
     RoundContext, concrete_cluster_ids, make_context)
 from repro.sharding.compat import shard_map
@@ -150,6 +150,25 @@ class Protocol:
         devices (the paper's H(·) functions). Topology-aware protocols read
         ``ctx.topology``."""
         raise NotImplementedError
+
+    def wire_model(self, D: int, L: int, *, do_global_sync: bool = True
+                   ) -> Optional[Tuple[Tuple[int, int, float], ...]]:
+        """The declared §3.2 wire structure of one mesh round: a tuple of
+        ``(group_size, num_groups, model_copies)`` ring-allreduce terms.
+        One round moves ``sum(num_groups * copies *
+        ring_wire_bytes(p.wire_bytes, group_size))`` bytes — and the
+        ``wire-model-parity`` analysis rule requires the STATIC byte count
+        of the traced ``psum_mix`` program (sized from psum operands and
+        ``axis_index_groups``) to equal exactly that, for every codec.
+
+        ``model_copies`` counts full-model allreduces in the term: our
+        lowerings move the weighted new models AND the old-params straggler
+        fallback (two copies) — a deliberate simulator-fidelity choice the
+        model must price rather than hide.
+
+        Returns ``None`` when the protocol declares no wire structure
+        (the parity rule then skips it)."""
+        return None
 
     # ------------------------------------------------------------------
     # shared helpers

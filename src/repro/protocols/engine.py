@@ -73,11 +73,11 @@ def _resolve_spec(proto: Protocol, ctx, mix_path: str):
 def make_local_trainer(net: PaperNetConfig, fl: FLConfig):
     """Returns f(params, cx, cy, cmask, key) -> (params', mean_loss) for ONE
     client; callers vmap it over participants."""
-    O = fl.batch_size
+    bs = fl.batch_size
 
     def local_train(params, cx, cy, cmask, key):
         n_max = cy.shape[0]
-        steps = max(1, -(-n_max // O))               # ceil
+        steps = max(1, -(-n_max // bs))               # ceil
 
         def epoch(carry, ekey):
             params, loss_sum, cnt = carry
@@ -85,7 +85,7 @@ def make_local_trainer(net: PaperNetConfig, fl: FLConfig):
 
             def step(carry, s):
                 params, loss_sum, cnt = carry
-                idx = jnp.take(perm, (jnp.arange(O) + s * O) % n_max)
+                idx = jnp.take(perm, (jnp.arange(bs) + s * bs) % n_max)
                 batch = {"x": cx[idx], "y": cy[idx], "mask": cmask[idx]}
                 loss, grads = jax.value_and_grad(paper_net_loss)(params, batch, net)
                 params = jax.tree.map(
@@ -405,7 +405,7 @@ class DenseEngine:
         if self.codec is None or not self.codec.stateful:
             return None
         P = self.proto.num_participants(self.fl)
-        total = sum(int(l.size) for l in jax.tree.leaves(params))
+        total = sum(int(leaf.size) for leaf in jax.tree.leaves(params))
         return jnp.zeros((P, total), jnp.float32)
 
 
@@ -580,7 +580,7 @@ class MeshEngine:
             chunk, t0 = xs
             out = []
             for i in range(sp):                      # unrolled: sync static
-                b_i = jax.tree.map(lambda l: l[i], chunk)
+                b_i = jax.tree.map(lambda leaf: leaf[i], chunk)
                 f_params, key, loss, cstate = one_round(
                     f_params, key, b_i, t0 + i, i == sp - 1, cstate)
                 out.append(loss)
@@ -590,7 +590,7 @@ class MeshEngine:
         if stateful and cstate is None:
             cstate = self.init_codec_state(f_params)
         main = jax.tree.map(
-            lambda l: l[:n_chunks * sp].reshape((n_chunks, sp) + l.shape[1:]),
+            lambda x: x[:n_chunks * sp].reshape((n_chunks, sp) + x.shape[1:]),
             batches)
         t0s = jnp.arange(n_chunks, dtype=jnp.int32) * sp
         (f_params, key, cstate), losses = jax.lax.scan(
@@ -599,7 +599,7 @@ class MeshEngine:
         # T % sync_period tail rounds: never hit (t+1) % sp == 0 -> no sync
         tail = []
         for i in range(rem):
-            b_i = jax.tree.map(lambda l: l[n_chunks * sp + i], batches)
+            b_i = jax.tree.map(lambda leaf: leaf[n_chunks * sp + i], batches)
             f_params, key, loss, cstate = one_round(
                 f_params, key, b_i, n_chunks * sp + i, False, cstate)
             tail.append(loss)
@@ -617,8 +617,8 @@ class MeshEngine:
             return None
         if self.mesh_info is not None:
             return compression.init_feedback_state(self.codec, f_params)
-        total = sum(int(l.size) // self.num_clients_dev
-                    for l in jax.tree.leaves(f_params))
+        total = sum(int(leaf.size) // self.num_clients_dev
+                    for leaf in jax.tree.leaves(f_params))
         return jnp.zeros((self.num_clients_dev, total), jnp.float32)
 
     def run_rounds(self, f_params, key, T: int, batches, codec_state=None):

@@ -75,3 +75,9 @@ class FedAvg(Protocol):
     def comm_time(self, p: CommParams, P: int, *, L: Optional[float] = None,
                   ctx: Optional[RoundContext] = None) -> float:
         return h_fedavg(p, P)
+
+    def wire_model(self, D: int, L: int, *, do_global_sync: bool = True):
+        """One global ring over all D clients, two model copies: the
+        |D_i|-weighted new-model psum plus the old-params dead-round
+        fallback psum (see ``psum_mix`` — both are full-leaf allreduces)."""
+        return ((D, 1, 2.0),)

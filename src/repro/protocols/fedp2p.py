@@ -133,3 +133,15 @@ class FedP2P(Protocol):
         if L is None:
             return min_h_fedp2p(p, P)       # at the closed-form optimal L*
         return h_fedp2p(p, P, L)
+
+    def wire_model(self, D: int, L: int, *, do_global_sync: bool = True):
+        """L within-cluster rings of q = D/L devices (the weighted
+        cluster-local allreduce + the dead-cluster old-params fallback:
+        two copies), plus — on sync rounds — one global ring, again two
+        copies (the server mean + the everyone-dead fallback). This is the
+        literal traffic pattern H_p2p prices."""
+        q = D // L
+        entries = ((q, L, 2.0),)
+        if do_global_sync:
+            entries += ((D, 1, 2.0),)
+        return entries

@@ -149,3 +149,12 @@ class DecentralizedGossip(Protocol):
         n=2 ring allreduce over a device-device link. No server term and no
         dependence on P. Prices codec-adjusted wire bytes."""
         return 2.0 * allreduce_time(p.wire_bytes, 2, p.device_bw)
+
+    def wire_model(self, D: int, L: int, *, do_global_sync: bool = True):
+        """One term per ring phase: the phase's pairs, each a 2-device ring
+        moving one effective model (singleton byes move nothing). Derived
+        from the same ``_phase_groups`` the mesh lowering builds its
+        ``axis_index_groups`` from."""
+        g1, g2 = _phase_groups(D)
+        return tuple((2, sum(1 for g in gs if len(g) == 2), 1.0)
+                     for gs in (g1, g2))

@@ -381,10 +381,13 @@ def test_cli_main_inprocess_gates_on_errors(tmp_path):
 
     out = tmp_path / "ANALYSIS.json"
     rc = main(["--engine", "dense", "--protocol", "fedavg",
-               "--codec", "none", "--rounds", "2", "--out", str(out)])
+               "--codec", "none", "--rounds", "2", "--out", str(out),
+               "--baseline", "", "--diff-out", ""])
     assert rc == 0
     doc = json.loads(out.read_text())
-    assert doc["ok"] and len(doc["programs"]) == 2
+    # default --mix-path both: dense AND sparse lowerings, round + run each
+    assert doc["ok"] and len(doc["programs"]) == 4
+    assert len(doc["contracts"]) == 4
 
     class AlwaysBad(rule_base.Rule):
         id = "always-bad"
@@ -397,7 +400,8 @@ def test_cli_main_inprocess_gates_on_errors(tmp_path):
     try:
         rc = main(["--engine", "dense", "--protocol", "fedavg",
                    "--codec", "none", "--rounds", "2",
-                   "--rules", "always-bad", "--out", ""])
+                   "--rule", "always-bad", "--out", "",
+                   "--baseline", "", "--diff-out", ""])
         assert rc == 1
     finally:
         rule_base.unregister("always-bad")
@@ -416,7 +420,7 @@ def test_cli_subprocess_mesh_and_dense_clean(tmp_path):
     proc = subprocess.run(
         [sys.executable, "-m", "repro.analysis", "--protocol", "fedavg",
          "--engine", "both", "--codec", "none", "--rounds", "2",
-         "--out", str(out)],
+         "--out", str(out), "--baseline", "", "--diff-out", ""],
         capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     doc = json.loads(out.read_text())

@@ -114,8 +114,6 @@ def test_int8_error_bounded_by_chunk_scale(d, stochastic):
     assert enc.values.shape[1] % c.chunk == 0
     xh = c.decode(enc, x.shape)
     # per-entry bound from that entry's own chunk scale
-    pad = (-d) % c.chunk
-    xp = np.pad(np.asarray(x), ((0, 0), (0, pad)))
     steps = np.asarray(enc.scales)
     bound = np.repeat(steps, c.chunk, axis=1)[:, :d]
     err = np.abs(np.asarray(xh) - np.asarray(x))
@@ -328,7 +326,7 @@ def test_apply_mixing_topk_threads_residual():
     f_new, f_old = _trees(rng, D)
     out, state = protocols.get("fedavg").apply_mixing(
         mn, mo, f_new, f_old, codec="topk")
-    total = sum(int(l.size) // D for l in jax.tree.leaves(f_new))
+    total = sum(int(leaf.size) // D for leaf in jax.tree.leaves(f_new))
     assert state.shape == (D, total)
     assert float(jnp.abs(state).max()) > 0.0              # dropped mass
     # feeding the residual back changes (improves) the next reconstruction
@@ -468,8 +466,8 @@ def test_mesh_engine_chunked_run_rounds_threads_residual():
     # splits keys per chunk, so reproduce the full run's draws by reusing
     # the carry key — simplest exact check: chunk with threaded state vs
     # chunk with dropped state, from identical inputs
-    half = jax.tree.map(lambda l: l[: T // 2], bt)
-    rest = jax.tree.map(lambda l: l[T // 2:], bt)
+    half = jax.tree.map(lambda leaf: leaf[: T // 2], bt)
+    rest = jax.tree.map(lambda leaf: leaf[T // 2:], bt)
     fp1, _, st1 = engine.run_rounds(fp0, jax.random.PRNGKey(5), T // 2, half)
     assert float(jnp.abs(st1).max()) > 0.0        # feedback mass captured
     k2 = jax.random.PRNGKey(6)

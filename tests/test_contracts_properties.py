@@ -1,0 +1,52 @@
+"""Hypothesis property tests for the contracts liveness pass, over
+randomly nested scan/cond/while jaxprs.
+
+Degrades (skips), not dies, without the hypothesis dev dep — the
+deterministic nesting matrix in test_contracts.py always runs; this
+module widens it to randomized op sequences when hypothesis is
+available (same pattern as test_attention.py).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")   # degrade, don't die, without dev deps
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.analysis import contracts as C  # noqa: E402
+from test_contracts import build_nested_program  # noqa: E402
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["scan", "cond", "while", "ew"]),
+              st.integers(min_value=1, max_value=4)),
+    min_size=0, max_size=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=_OPS, n=st.integers(min_value=1, max_value=8))
+def test_peak_liveness_bounds_and_determinism(ops, n):
+    j = build_nested_program(ops, n)
+    peak = C.peak_live_bytes(j)
+    assert peak == C.peak_live_bytes(j)          # deterministic
+    assert peak >= C.input_bytes(j) > 0          # inputs are live at entry
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=_OPS, n=st.integers(min_value=1, max_value=6),
+       big=st.integers(min_value=50, max_value=150))
+def test_peak_liveness_monotone_under_big_temp(ops, n, big):
+    """Appending a [big, big] temporary raises the estimate by at least
+    the temporary's size — the property the [D, D] gate rests on."""
+    j = build_nested_program(ops, n)
+    peak = C.peak_live_bytes(j)
+
+    def with_temp(x):
+        t = jnp.zeros((big, big), jnp.float32) + x.mean()
+        return jax.core.eval_jaxpr(j.jaxpr, j.consts, x), t.sum()
+
+    j2 = jax.make_jaxpr(with_temp)(
+        jax.ShapeDtypeStruct((n, 3), jnp.float32))
+    peak2 = C.peak_live_bytes(j2)
+    assert peak2 >= peak
+    assert peak2 >= big * big * 4

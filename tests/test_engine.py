@@ -154,7 +154,7 @@ def test_mesh_engine_scan_matches_per_round_rounds():
         survive = straggler_mask(k_str, D, fl.straggler_rate)
         in_main = t < (T // sp) * sp
         sync = in_main and (t % sp == sp - 1)    # (t+1) % sp == 0
-        fp, loss = engine.round_fn(fp, jax.tree.map(lambda l: l[t], bt),
+        fp, loss = engine.round_fn(fp, jax.tree.map(lambda leaf: leaf[t], bt),
                                    survive, k_mix, do_global_sync=bool(sync),
                                    round_index=t)
         losses_ref.append(float(loss))

@@ -167,7 +167,7 @@ def test_engine_topk_feedback_rides_packed_carry(sim_data):
     eng = _engine(sim, fl, "fedp2p", "sparse", codec="topk")
     params = sim.init_params(0)
     P = protocols.get("fedp2p").num_participants(fl)
-    total = sum(int(l.size) for l in jax.tree.leaves(params))
+    total = sum(int(leaf.size) for leaf in jax.tree.leaves(params))
     p1, _, res = eng.round_fn(params, jax.random.PRNGKey(3))
     assert res.shape == (P, total)
     assert float(jnp.sum(jnp.abs(res))) > 0.0

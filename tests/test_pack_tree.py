@@ -94,7 +94,7 @@ if HAVE_HYPOTHESIS:
         the promoted f32), and bit-patterns."""
         flat, spec = ops.pack_tree(tree)
         n = jax.tree.leaves(tree)[0].shape[0]
-        total = sum(int(l.size) // n for l in jax.tree.leaves(tree))
+        total = sum(int(leaf.size) // n for leaf in jax.tree.leaves(tree))
         assert flat.shape == (n, total)
         back = ops.unpack_tree(flat, spec)
         assert (jax.tree_util.tree_structure(back)

@@ -95,10 +95,10 @@ def test_token_stream_learnable_structure():
     # deterministic successor: labels are a function of tokens
     m = {}
     ok = True
-    for t, l in zip(b["tokens"].ravel(), b["labels"].ravel()):
-        if t in m and m[t] != l:
+    for t, lab in zip(b["tokens"].ravel(), b["labels"].ravel()):
+        if t in m and m[t] != lab:
             ok = False
-        m[t] = l
+        m[t] = lab
     assert ok
 
 
