@@ -30,7 +30,10 @@ def run(quick: bool = True):
     cmd = [sys.executable, "-m", "repro.analysis", "--out", out,
            "--diff-out", os.path.join(tmp, "CONTRACTS_DIFF.md")]
     if quick:
-        cmd += ["--engine", "dense", "--codec", "none"]
+        # dense + sampled: the sampled suite is trace-only (the 10^6-client
+        # store never allocates) so it is cheap enough for the quick pass,
+        # and its state-residency verdict is a row we want tracked per PR
+        cmd += ["--engine", "dense,sampled", "--codec", "none"]
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(_REPO, "src"), env.get("PYTHONPATH"))
@@ -59,6 +62,23 @@ def run(quick: bool = True):
         ("analysis/ok", float(doc["ok"] and proc.returncode == 0),
          f"exit={proc.returncode}"),
     ]
+    # state-residency row-ification: the sampled-window programs' peak live
+    # bytes must track the K-row window, never the D=10^6 enrollment
+    sampled = [p for p in doc["programs"]
+               if p["name"].startswith("sampled/")]
+    if sampled:
+        peaks = [p["peak_live_bytes"] or 0 for p in sampled]
+        sr_errs = sum(1 for f in doc["findings"]
+                      if f["rule"] == "state-residency"
+                      and f["severity"] == "ERROR")
+        rows += [
+            ("analysis/sampled_programs", float(len(sampled)), ""),
+            ("analysis/sampled_peak_live_mib",
+             max(peaks) / 2 ** 20,
+             "max over sampled-window programs; window-sized, D-free"),
+            ("analysis/state_residency_errors", float(sr_errs),
+             "population-shaped avals or window-budget breaches"),
+        ]
     if doc["num_errors"] or proc.returncode != 0:
         errs = [f"{f['rule']} :: {f['program']}: {f['message']}"
                 for f in doc["findings"] if f["severity"] == "ERROR"]

@@ -84,6 +84,59 @@ def sweep_one(name: str, D: int, n: int, *, iters: int = 3):
     return dense_us, sparse_us, dense_mib, _temp_mib(sparse_fn, xn, xo, key)
 
 
+# sampled-participation sweep: the active window is FIXED at K=1024 while
+# enrollment D grows 100x — the compiled round must not notice. D=10^6 is
+# cheap to include even in quick mode precisely BECAUSE the round is
+# D-independent (only the host-side store gather sees D at all).
+SAMPLED_K = 1024
+SAMPLED_DS = (10 ** 4, 10 ** 6)
+
+
+def sweep_sampled(name: str, D: int, K: int, n: int, *, iters: int = 3):
+    """(window_us, store_us) for one (protocol, enrolled D): the compiled
+    [K, n] window mix of a K-active-of-D-enrolled round, plus the host-side
+    store gather+scatter that moves the window in and out."""
+    import time
+
+    from repro.protocols import make_store
+
+    proto = protocols.get(name)
+    fl = FLConfig(num_clusters=min(8, K), participation=K,
+                  num_enrolled=D, participants_per_round=K)
+    cids = jnp.asarray(proto.mesh_cluster_ids(K, fl))
+    L = int(np.asarray(cids).max()) + 1
+    rng = np.random.default_rng(K)
+    survive = jnp.asarray((rng.random(K) > 0.1).astype(np.float32))
+    counts = jnp.asarray(rng.uniform(0.5, 5.0, K).astype(np.float32))
+
+    def window_fn(xn, xo, ids, key):
+        ctx = make_context(key=key, survive=survive, counts=counts,
+                           cluster_ids=cids, num_clusters=L,
+                           do_global_sync=True, active_ids=ids,
+                           num_enrolled=D)
+        return apply_spec_flat(proto.mixing_spec(ctx), xn, xo)
+
+    xn = jnp.asarray(rng.normal(size=(K, n)).astype(np.float32))
+    xo = jnp.asarray(rng.normal(size=(K, n)).astype(np.float32))
+    ids_np = rng.choice(D, size=K, replace=False).astype(np.int32)
+    key = jax.random.PRNGKey(0)
+    # D reaches the compiled program only as VALUES of the [K] id vector —
+    # the jit signature (and hence the compiled round cost) is D-free
+    window_us = timed(jax.jit(window_fn), xn, xo, jnp.asarray(ids_np), key,
+                      iters=iters)
+
+    store = make_store(jnp.zeros((n,), jnp.float32), D)
+    store.scatter(ids_np, np.asarray(xo))       # warm: rows become overlay
+    t_best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        win = store.gather(ids_np)
+        jax.block_until_ready(win)
+        store.scatter(ids_np, win)
+        t_best = min(t_best, time.perf_counter() - t0)
+    return window_us, t_best * 1e6
+
+
 def run(quick: bool = True, n: int | None = None, verbose: bool = False):
     import sys
     import time
@@ -91,12 +144,15 @@ def run(quick: bool = True, n: int | None = None, verbose: bool = False):
     ds = QUICK_DS if quick else FULL_DS
     n = n or (2048 if quick else 4096)
     rows = []
+    resident_us = {}       # protocol -> sparse round us at resident D=1024
     for name in SWEEP_PROTOCOLS:
         for D in ds:
             t0 = time.time()
             iters = 1 if D >= 4096 else 3
             dense_us, sparse_us, dense_mib, sparse_mib = sweep_one(
                 name, D, n, iters=iters)
+            if D == SAMPLED_K:
+                resident_us[name] = sparse_us
             tag = f"scale/{name}/D{D}"
             if dense_us > 0:
                 rows.append((f"{tag}/dense_round_us", dense_us,
@@ -118,6 +174,26 @@ def run(quick: bool = True, n: int | None = None, verbose: bool = False):
             if verbose:
                 print(f"# {tag}: dense={dense_us:.0f}us "
                       f"sparse={sparse_us:.0f}us ({time.time() - t0:.1f}s)",
+                      file=sys.stderr)
+    for name in SWEEP_PROTOCOLS:
+        for D in SAMPLED_DS:
+            t0 = time.time()
+            window_us, store_us = sweep_sampled(name, D, SAMPLED_K, n)
+            tag = f"scale/sampled/{name}/D{D}/K{SAMPLED_K}"
+            rows.append((f"{tag}/round_us", window_us,
+                         f"compiled [K,{n}] window mix, K of D enrolled"))
+            rows.append((f"{tag}/store_us", store_us,
+                         "host store gather+scatter of the window"))
+            if resident_us.get(name):
+                # the tentpole's acceptance ratio: a K-active round over a
+                # 10^6 enrollment vs the SAME round resident at D=K
+                rows.append((f"{tag}/vs_resident_D{SAMPLED_K}",
+                             window_us / max(resident_us[name], 1e-9),
+                             "sampled/resident compiled round-time ratio "
+                             "(target: <= 2x, i.e. D-independent)"))
+            if verbose:
+                print(f"# {tag}: window={window_us:.0f}us "
+                      f"store={store_us:.0f}us ({time.time() - t0:.1f}s)",
                       file=sys.stderr)
     return rows
 

@@ -32,8 +32,12 @@ def main(argv=None) -> int:
                     "invariants: rule checks + contract snapshot diffing")
     ap.add_argument("--protocol", default="all", metavar="NAME[,NAME...]",
                     help="registered protocol name(s), or 'all'")
-    ap.add_argument("--engine", choices=("dense", "mesh", "both"),
-                    default="both")
+    ap.add_argument("--engine", default="all",
+                    metavar="{dense,mesh,sampled,both,all}[,...]",
+                    help="engine suite(s) to trace, comma-separable; 'all' "
+                         "(default) covers dense + mesh + sampled — the "
+                         "baseline's coverage ratchet ('both' = the "
+                         "pre-sampled dense + mesh pair)")
     ap.add_argument("--mix-path", dest="mix_path", default="both",
                     choices=("dense", "sparse", "auto", "both"),
                     help="dense-engine mixing lowering to trace; 'both' "
@@ -79,8 +83,16 @@ def main(argv=None) -> int:
     names = (list(protocols.names()) if args.protocol == "all"
              else [protocols.get(n.strip()).name
                    for n in args.protocol.split(",")])
-    engines = {"dense": ("dense",), "mesh": ("mesh",),
-               "both": ("dense", "mesh")}[args.engine]
+    _engine_sets = {"dense": ("dense",), "mesh": ("mesh",),
+                    "sampled": ("sampled",), "both": ("dense", "mesh"),
+                    "all": ("dense", "mesh", "sampled")}
+    engines = []
+    for tok in (t.strip() for t in args.engine.split(",") if t.strip()):
+        if tok not in _engine_sets:
+            ap.error(f"unknown engine {tok!r} (choose from "
+                     f"{', '.join(sorted(_engine_sets))})")
+        engines += [e for e in _engine_sets[tok] if e not in engines]
+    engines = tuple(engines)
     codecs = tuple(c.strip() for c in args.codec.split(",") if c.strip())
     rule_ids = ([r.strip() for r in args.rules.split(",")]
                 if args.rules else []) + (args.rule or [])

@@ -30,7 +30,7 @@ from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import LOGREG_SYN
 from repro.protocols.context import make_context
-from repro.protocols.engine import DenseEngine, MeshEngine
+from repro.protocols.engine import DenseEngine, MeshEngine, SampledEngine
 
 
 @dataclass
@@ -145,6 +145,60 @@ def dense_programs(protocol: str, *, codec: str = "none",
             meta=dict(base_meta, rounds=rounds,
                       donate_intent=tuple(engine._donate_argnums))))
     return out
+
+
+# ---------------------------------------------------------------------------
+# sampled (persistent store + active window) suite
+# ---------------------------------------------------------------------------
+
+#: audited enrolled population — absurdly far from every toy shape, so ANY
+#: dimension equal to it in the window program is a real residency leak
+SAMPLED_D = 10 ** 6
+
+
+def sampled_programs(protocol: str, *, codec: str = "none",
+                     mix_path: str = "auto", K: int = DENSE_P,
+                     num_enrolled: int = SAMPLED_D) -> List[Program]:
+    """Trace a SampledEngine WINDOW round for one (protocol, codec,
+    mix_path): the compiled program a K-active-of-D-enrolled round runs
+    after the store gather. The trace takes only [K, sum(sizes)]-sized
+    ``ShapeDtypeStruct``s — D enters exclusively as static metadata, which
+    is exactly what the ``state-residency`` rule certifies."""
+    proto = protocols.get(protocol)
+    fl = FLConfig(num_clients=K, num_clusters=2,
+                  devices_per_cluster=K // 2, participation=K,
+                  local_epochs=1, batch_size=4, lr=0.05,
+                  straggler_rate=0.1, num_enrolled=num_enrolled,
+                  participants_per_round=K)
+    resolved = _resolved_mix_path(proto, fl, mix_path)
+    engine = SampledEngine(LOGREG_SYN, _dense_data(K), fl, proto,
+                           codec=None if codec == "none" else codec,
+                           mix_path=mix_path)
+    # the store is host-side and never traced; init only supplies the
+    # packed TreeSpec (auto tier lands on the overlay store at this D)
+    engine.init_store(engine.init_params(0))
+    width = engine.store.width
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    flat_sds = _sds((K, width))
+    ids_sds = _sds((K,), jnp.int32)
+    t_sds = _sds((), jnp.int32)
+    stateful = engine._codec_stateful
+    if stateful:
+        jaxpr = jax.make_jaxpr(engine._window_round)(
+            flat_sds, ids_sds, key, key, key, t_sds, _sds((K, width)))
+    else:
+        jaxpr = jax.make_jaxpr(engine._window_round)(
+            flat_sds, ids_sds, key, key, key, t_sds)
+    meta = {"num_peers": K, "sparse_path": resolved == "sparse",
+            "census_budget": {}, "stateful_codec": stateful,
+            "wire_model": (), "model_bytes": float(width * 4),
+            "sampled_window": True, "num_enrolled": num_enrolled,
+            "window": K, "rounds": 1,
+            "donate_intent": tuple(engine._donate_argnums)}
+    return [Program(
+        name=f"sampled/{protocol}/{resolved}/{codec}/round",
+        jaxpr=jaxpr, engine="sampled", protocol=protocol,
+        mix_path=resolved, codec=codec, kind="round", meta=meta)]
 
 
 # ---------------------------------------------------------------------------
@@ -266,15 +320,15 @@ def mesh_programs(protocol: str, *, codec: str = "none", rounds: int = 3,
 # suite composition
 # ---------------------------------------------------------------------------
 
-def build_suite(protocol_names=None, *, engines=("dense", "mesh"),
+def build_suite(protocol_names=None, *, engines=("dense", "mesh", "sampled"),
                 mix_path: str = "auto", codecs=("none",), rounds: int = 3
                 ) -> List[Program]:
     """Every (protocol x codec) program on the requested engines.
 
-    ``mix_path='both'`` traces the dense engine through BOTH lowerings
-    (explicit dense and explicit sparse) — the full-coverage suite the
-    contracts baseline snapshots. The mesh engine always lowers grouped
-    psums, so mix_path only fans out the dense suite."""
+    ``mix_path='both'`` traces the dense AND sampled engines through BOTH
+    lowerings (explicit dense and explicit sparse) — the full-coverage
+    suite the contracts baseline snapshots. The mesh engine always lowers
+    grouped psums, so mix_path only fans out the other suites."""
     names = list(protocol_names) if protocol_names else list(protocols.names())
     dense_paths = ("dense", "sparse") if mix_path == "both" else (mix_path,)
     out: List[Program] = []
@@ -286,4 +340,8 @@ def build_suite(protocol_names=None, *, engines=("dense", "mesh"),
                                               mix_path=mp, rounds=rounds))
             if "mesh" in engines:
                 out.extend(mesh_programs(name, codec=codec, rounds=rounds))
+            if "sampled" in engines:
+                for mp in dense_paths:
+                    out.extend(sampled_programs(name, codec=codec,
+                                                mix_path=mp))
     return out

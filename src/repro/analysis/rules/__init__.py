@@ -7,5 +7,5 @@ automatically.
 """
 from repro.analysis.rules import (  # noqa: F401
     collective_census, donation, no_dense_mixing, no_host_transfer,
-    peak_memory, scan_carry, wire_model,
+    peak_memory, scan_carry, state_residency, wire_model,
 )

@@ -1,0 +1,84 @@
+"""state-residency: a sampled-participation window program's live state
+scales with the ACTIVE window (K·sum(sizes)), never with the ENROLLED
+population (D·sum(sizes)).
+
+The whole point of the ``ClientStateStore`` + active-window refactor is
+that enrolling D=10^6 clients prices storage, not compute: the compiled
+per-round program sees only the gathered [K, sum(sizes)] rows, and the
+O(D) selection vectors live OUTSIDE it (``SampledEngine.select_fn``). Two
+checks pin that:
+
+1. population probe — no array in the traced window program (recursively,
+   through scan/cond/pjit sub-jaxprs) has ANY dimension equal to the
+   audited ``num_enrolled``. Sampled audit programs set D=10^6, far from
+   every toy training shape, so a hit really is enrolled state leaking
+   into the compiled round (a [D, w] gather, a [D] selection score, a
+   densified store).
+2. window budget — the peak-live-bytes estimate stays within a constant
+   factor of the program's inputs, which are O(K·w) (the gathered window +
+   batches + keys). Same budget discipline as ``peak-live-bytes``; a
+   D-sized temporary of any shape blows it by orders of magnitude.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.base import Rule, register
+from repro.analysis.findings import ERROR, Finding
+from repro.analysis.walker import find_avals
+
+#: legitimate temporaries are O(window inputs): grads + copies + scratch
+FACTOR = 4.0
+#: window-independent bookkeeping headroom (tiny toy programs)
+SLACK = 256 * 1024
+
+
+class StateResidency(Rule):
+    id = "state-residency"
+    doc = ("sampled-window programs keep peak live bytes O(K*sum(sizes)) — "
+           "no enrolled-population (D-sized) array is live in the compiled "
+           "round")
+
+    def applies(self, program) -> bool:
+        return bool(program.meta.get("sampled_window"))
+
+    def check(self, program) -> List[Finding]:
+        from repro.analysis.contracts import input_bytes, peak_live_bytes
+        out: List[Finding] = []
+        D = int(program.meta.get("num_enrolled", 0))
+        if D <= 0:
+            return [self.finding(
+                ERROR, program, "",
+                "sampled_window program carries no num_enrolled meta — the "
+                "population probe has no D to audit against")]
+
+        def touches_population(aval):
+            return any(int(s) == D for s in getattr(aval, "shape", ()))
+
+        sites = find_avals(program.jaxpr, touches_population, max_sites=1)
+        if sites:
+            site, aval = sites[0]
+            out.append(self.finding(
+                ERROR, program, "",
+                f"enrolled-population array {tuple(aval.shape)} "
+                f"{aval.dtype} is live in the compiled window round (eqn "
+                f"{site.eqn.primitive.name!r}) — state residency must be "
+                f"O(K*sum(sizes)); D={D} belongs to the store and the "
+                "host-side selection, never to the window program"))
+        peak = peak_live_bytes(program.jaxpr)
+        inputs = input_bytes(program.jaxpr)
+        program.meta["peak_live_bytes"] = peak    # surfaced in ANALYSIS.json
+        budget = program.meta.get("peak_budget_bytes")
+        if budget is None:
+            budget = FACTOR * inputs + SLACK
+        if peak > budget:
+            out.append(self.finding(
+                ERROR, program, "",
+                f"estimated peak live bytes {peak:g} exceed the "
+                f"O(K*sum(sizes)) window budget {budget:g} ({FACTOR:g}x "
+                f"{inputs:g} input bytes + {SLACK} slack) — a super-linear "
+                "temporary is live in the sampled round"))
+        return out
+
+
+register(StateResidency())

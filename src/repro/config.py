@@ -229,6 +229,56 @@ class FLConfig:
     # (O(D·n) per round, raises for spec-less protocols), "auto" = sparse
     # exactly where a spec exists.
     mix_path: str = "auto"
+    # --- sampled participation (SampledEngine / ClientStateStore) ---
+    # D — the ENROLLED client population behind a protocols.store state
+    # store. 0 (default) = resident mode: num_clients is the whole
+    # population and every engine behaves exactly as before. When set,
+    # each round only gathers/trains/mixes/scatters a K-sized active
+    # window of the [D, sum(sizes)] store.
+    num_enrolled: int = 0
+    # K — active clients per sampled round. 0 (default) = the protocol's
+    # own num_participants(fl). Must satisfy K <= num_enrolled (validated
+    # below) and K >= the protocol's cluster count (validated at engine
+    # construction — protocols.base.validate_participation).
+    participants_per_round: int = 0
+    # repro.protocols participation-strategy registry name (uniform |
+    # pareto): how the K-sized active set is drawn from the D enrolled
+    # clients. "uniform" is the paper's uniform-without-replacement
+    # sampling; "pareto" biases toward resource-rich clients under the
+    # participation_rate availability cap (SNIPPETS.md snippet 1).
+    participation_strategy: str = "uniform"
+    # fraction of enrolled clients available in any given round (the
+    # Pareto strategy's per-round Bernoulli availability cap; uniform
+    # ignores it). Must lie in (0, 1].
+    participation_rate: float = 1.0
+
+    def __post_init__(self):
+        if self.num_enrolled < 0:
+            raise ValueError(
+                f"FLConfig: num_enrolled must be >= 0 (0 = resident mode), "
+                f"got {self.num_enrolled}")
+        if self.participants_per_round < 0:
+            raise ValueError(
+                f"FLConfig: participants_per_round must be >= 0 (0 = the "
+                f"protocol's own participant count), got "
+                f"{self.participants_per_round}")
+        if (self.num_enrolled and self.participants_per_round
+                and self.participants_per_round > self.num_enrolled):
+            raise ValueError(
+                f"FLConfig: participants_per_round="
+                f"{self.participants_per_round} active clients exceed the "
+                f"num_enrolled={self.num_enrolled} enrolled population; a "
+                "sampled round needs K <= D")
+        if not (0.0 < self.participation_rate <= 1.0):
+            raise ValueError(
+                f"FLConfig: participation_rate must lie in (0, 1], got "
+                f"{self.participation_rate}")
+
+    @property
+    def enrolled(self) -> int:
+        """D — the client population a state store holds: ``num_enrolled``
+        when sampled participation is on, else ``num_clients``."""
+        return self.num_enrolled or self.num_clients
 
 
 # ---------------------------------------------------------------------------

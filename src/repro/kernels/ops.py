@@ -111,6 +111,52 @@ def unpack_tree(flat: jnp.ndarray, spec: TreeSpec):
     return jax.tree_util.tree_unflatten(spec.treedef, outs)
 
 
+def gather_rows(flat: jnp.ndarray, ids) -> jnp.ndarray:
+    """Window a packed [D, sum(sizes)] buffer: rows ``ids`` -> [K,
+    sum(sizes)]. THE shared windowing seam of the sampled-participation
+    path (``protocols.store`` gathers active rows through it; the
+    ``SampledEngine`` round and every test drive the same call), so
+    gather/scatter semantics can never diverge between tiers.
+
+    ``ids`` may be traced ([K] int); ``gather_rows(flat, arange(D))``
+    returns the identity window — the bit-for-bit bridge between the
+    sampled and resident rounds."""
+    if getattr(flat, "ndim", 0) != 2:
+        raise ValueError(
+            f"gather_rows: expected a packed [D, sum(sizes)] buffer, got "
+            f"shape {getattr(flat, 'shape', ())}; pack the pytree with "
+            "pack_tree first")
+    ids = jnp.asarray(ids)
+    if ids.ndim != 1:
+        raise ValueError(
+            f"gather_rows: ids must be a 1-D [K] index vector, got shape "
+            f"{ids.shape}")
+    return jnp.take(flat, ids, axis=0)
+
+
+def scatter_rows(flat: jnp.ndarray, ids, rows: jnp.ndarray) -> jnp.ndarray:
+    """Write a [K, sum(sizes)] window back into a packed [D, sum(sizes)]
+    buffer at rows ``ids`` (the inverse seam of ``gather_rows``). ``ids``
+    must be distinct — a sampled active set never repeats a client — or
+    the last write silently wins (jax scatter semantics)."""
+    if getattr(flat, "ndim", 0) != 2 or getattr(rows, "ndim", 0) != 2:
+        raise ValueError(
+            f"scatter_rows: expected packed 2-D buffers, got state shape "
+            f"{getattr(flat, 'shape', ())} and window shape "
+            f"{getattr(rows, 'shape', ())}")
+    if flat.shape[-1] != rows.shape[-1]:
+        raise ValueError(
+            f"scatter_rows: window width {rows.shape[-1]} does not match "
+            f"the state's packed width {flat.shape[-1]} — the two buffers "
+            "were packed with different TreeSpecs")
+    ids = jnp.asarray(ids)
+    if ids.ndim != 1 or ids.shape[0] != rows.shape[0]:
+        raise ValueError(
+            f"scatter_rows: ids shape {tuple(ids.shape)} does not index the "
+            f"[{rows.shape[0]}, ...] window (need one id per window row)")
+    return flat.at[ids].set(rows.astype(flat.dtype))
+
+
 # ---------------------------------------------------------------------------
 # kernel dispatch
 # ---------------------------------------------------------------------------

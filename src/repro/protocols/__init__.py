@@ -22,15 +22,22 @@ stochastic one (``gossip_async`` draws a fresh random matching from
 """
 from repro.protocols.async_gossip import AsyncGossip
 from repro.protocols.base import (  # noqa: F401
-    Protocol, get, names, register, resolve, unregister,
+    ParticipationStrategy, Protocol, active_window_size, get,
+    get_participation, names, participation_names, register,
+    register_participation, resolve, unregister, validate_participation,
 )
 from repro.protocols.context import RoundContext, make_context  # noqa: F401
-from repro.protocols.engine import DenseEngine, MeshEngine  # noqa: F401
+from repro.protocols.engine import (  # noqa: F401
+    DenseEngine, MeshEngine, SampledEngine,
+)
 from repro.protocols.fedavg import FedAvg
 from repro.protocols.fedp2p import FedP2P
 from repro.protocols.gossip import DecentralizedGossip
 from repro.protocols.spec import (  # noqa: F401
     MatchingSpec, MixingSpec, SegmentSpec, apply_spec_flat, apply_spec_tree,
+)
+from repro.protocols.store import (  # noqa: F401
+    CheckpointStore, ClientStateStore, MemoryStore, make_store,
 )
 from repro.protocols.topology_aware import TopologyAwareFedP2P
 
@@ -42,7 +49,11 @@ register(AsyncGossip())
 
 __all__ = [
     "Protocol", "register", "unregister", "get", "names", "resolve",
-    "RoundContext", "make_context", "DenseEngine", "MeshEngine",
+    "ParticipationStrategy", "register_participation", "get_participation",
+    "participation_names", "active_window_size", "validate_participation",
+    "RoundContext", "make_context",
+    "DenseEngine", "MeshEngine", "SampledEngine",
+    "ClientStateStore", "MemoryStore", "CheckpointStore", "make_store",
     "MixingSpec", "SegmentSpec", "MatchingSpec", "apply_spec_flat",
     "apply_spec_tree",
     "FedAvg", "FedP2P", "DecentralizedGossip", "TopologyAwareFedP2P",

@@ -84,8 +84,12 @@ class Protocol:
         return 1
 
     def select_participants(self, key, fl: FLConfig) -> jnp.ndarray:
-        """[P] distinct client indices sampled for this round."""
-        return sample_participants(key, fl.num_clients, self.num_participants(fl))
+        """[P] distinct client indices sampled for this round, via the
+        first-class participation strategy named by
+        ``fl.participation_strategy`` (the ``uniform`` default is
+        bit-for-bit the historical ``sample_participants`` draw)."""
+        return get_participation(fl.participation_strategy).select(
+            key, fl.num_clients, self.num_participants(fl), fl)
 
     def partition(self, key, fl: FLConfig,
                   topology: Optional[Topology] = None
@@ -305,6 +309,144 @@ def get(name: str) -> Protocol:
         raise ValueError(
             f"unknown protocol {name!r}; registered protocols: "
             f"{', '.join(names())}") from None
+
+
+# ---------------------------------------------------------------------------
+# Participation strategies — how the K-sized active set is drawn
+# ---------------------------------------------------------------------------
+
+class ParticipationStrategy:
+    """First-class client-selection rule: ``select(key, D, K, fl)`` returns
+    [K] distinct indices into the D-client population. Strategies are
+    stateless and jit-traceable, mirroring the Protocol contract; register
+    one instance per rule (``register_participation``)."""
+
+    #: registry key, e.g. "uniform"
+    name: str = ""
+
+    def select(self, key, num_clients: int, num_participants: int,
+               fl: FLConfig) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+class UniformParticipation(ParticipationStrategy):
+    """The paper's uniform-without-replacement sampling — bit-for-bit the
+    historical ``core.partition.sample_participants`` draw (same key, same
+    permutation), so making selection pluggable changes no existing
+    program."""
+
+    name = "uniform"
+
+    def select(self, key, num_clients: int, num_participants: int,
+               fl: FLConfig) -> jnp.ndarray:
+        return sample_participants(key, num_clients, num_participants)
+
+
+class ParetoParticipation(ParticipationStrategy):
+    """Participation-rate-capped biased selection (SNIPPETS.md snippet 1):
+    real cross-device fleets see heavy-tailed client capability, and
+    selecting for resource-rich clients under an availability cap improves
+    round efficiency without starving the tail.
+
+    Each enrolled client carries a STATIC Pareto(alpha)-distributed
+    resource score (drawn once from a fixed fold of client identity, so
+    scores are stable across rounds and across processes); each round an
+    independent Bernoulli(``fl.participation_rate``) availability mask is
+    drawn, and the K winners are a weighted-without-replacement sample
+    (Gumbel top-K over log-scores) among available clients. Unavailable
+    clients rank strictly below every available one, so they only fill
+    slots a too-small available pool leaves empty — the draw always
+    returns K distinct indices."""
+
+    name = "pareto"
+    #: Pareto shape: alpha = 3 keeps a heavy but finite-variance tail
+    alpha: float = 3.0
+
+    def select(self, key, num_clients: int, num_participants: int,
+               fl: FLConfig) -> jnp.ndarray:
+        k_avail, k_pick = jax.random.split(key)
+        # static per-client resource scores via inverse-CDF from a fixed
+        # enrollment key — NOT the round key, so capability is a property
+        # of the client, not of the round
+        u = jax.random.uniform(jax.random.PRNGKey(0x5C0BE5),
+                               (num_clients,), minval=1e-6, maxval=1.0)
+        log_score = -(1.0 / self.alpha) * jnp.log(u)   # log Pareto(alpha)
+        avail = jax.random.bernoulli(k_avail, fl.participation_rate,
+                                     (num_clients,))
+        g = log_score + jax.random.gumbel(k_pick, (num_clients,))
+        g = jnp.where(avail, g, g - 1e9)   # unavailable: strictly last
+        return jax.lax.top_k(g, num_participants)[1].astype(jnp.int32)
+
+
+_PARTICIPATION: Dict[str, ParticipationStrategy] = {}
+
+
+def register_participation(strategy: ParticipationStrategy
+                           ) -> ParticipationStrategy:
+    """Register a ParticipationStrategy instance under ``strategy.name``."""
+    if not strategy.name:
+        raise ValueError("participation strategy must define a non-empty "
+                         ".name")
+    if strategy.name in _PARTICIPATION:
+        raise ValueError(f"participation strategy {strategy.name!r} is "
+                         "already registered")
+    _PARTICIPATION[strategy.name] = strategy
+    return strategy
+
+
+def participation_names() -> Tuple[str, ...]:
+    """Registered participation-strategy names, in registration order."""
+    return tuple(_PARTICIPATION)
+
+
+def get_participation(name: str) -> ParticipationStrategy:
+    """Look up a participation strategy; unknown names raise (never a
+    silent uniform fallback)."""
+    try:
+        return _PARTICIPATION[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown participation strategy {name!r}; registered "
+            f"strategies: {', '.join(participation_names())}") from None
+
+
+register_participation(UniformParticipation())
+register_participation(ParetoParticipation())
+
+
+def active_window_size(fl: FLConfig, proto: Protocol) -> int:
+    """K — clients per sampled round: the explicit
+    ``fl.participants_per_round`` knob, else the protocol's own count."""
+    return fl.participants_per_round or proto.num_participants(fl)
+
+
+def validate_participation(fl: FLConfig, proto: Protocol) -> int:
+    """Validate the (enrolled D, active K) pair against ``proto``'s
+    structural needs and return K. Raises ``ValueError`` with the failing
+    numbers spelled out (the ``pack_tree`` error-message precedent):
+    K <= D, K >= the protocol's cluster count, and — for protocols whose
+    mesh layout carves the window into L contiguous clusters — L | K."""
+    D = fl.enrolled
+    K = active_window_size(fl, proto)
+    if K > D:
+        raise ValueError(
+            f"sampled participation: K={K} active clients per round exceed "
+            f"the D={D} enrolled population (protocol {proto.name!r}); "
+            "need K <= D")
+    # the window's cluster layout is the protocol's own static assignment
+    # at width K; protocols that carve L equal contiguous clusters
+    # (fedp2p family) assert L | K there — surface that as a clear error
+    # (the gossip family's per-client "clusters" scale with any K)
+    try:
+        proto.mesh_cluster_ids(K, fl)
+    except AssertionError:
+        L = fl.num_clusters
+        need = "K >= L (and L | K)" if K < L else "L | K"
+        raise ValueError(
+            f"sampled participation: protocol {proto.name!r} carves its "
+            f"active window into L={L} equal contiguous clusters, which a "
+            f"K={K} window cannot realize; need {need}") from None
+    return K
 
 
 def resolve(name: str, topology_aware: bool = False) -> Protocol:

@@ -19,6 +19,9 @@ replaces that argument soup with one pytree record:
                          build static ``axis_index_groups`` require it
                          concrete (numpy), which engines guarantee by
                          closing over the static assignment.
+    * ``active_ids``   — [K] enrolled-client ids behind the window rows on
+                         the sampled-participation path (``None`` on every
+                         resident path, where row i IS client i).
 
   meta fields (static; hashable aux data of the pytree)
     * ``num_clusters``   — L, the static shape parameter behind cluster_ids,
@@ -32,7 +35,11 @@ replaces that argument soup with one pytree record:
                            f_new leaf in the codec's quantize/dequantize
                            round trip before the grouped psums (the
                            quantized-exchange wire). ``None`` = exact
-                           full-precision exchange.
+                           full-precision exchange,
+    * ``num_enrolled``   — D, the enrolled population an active window was
+                           sampled from (0 everywhere except the sampled-
+                           participation path, so specs and cost models can
+                           price K vs D).
 
 Contexts are normally constructed *inside* a traced round program (see
 ``protocols.engine``), so the static fields never need to cross a jit
@@ -60,16 +67,26 @@ class RoundContext:
     survive: Any                  # [D] 0/1 straggler mask
     counts: Any                   # [D] per-client data weights |D_i|
     cluster_ids: Any              # [D] cluster assignment
+    active_ids: Any = None        # [K] enrolled-client ids behind the window
+    #                               rows on the sampled path (None = resident:
+    #                               row i IS client i). Traced — selections
+    #                               vary per round.
     # --- meta fields (static) ------------------------------------------
     num_clusters: int = 1
     do_global_sync: bool = True
     topology: Optional[Topology] = None
     mesh_info: Any = None
     codec: Any = None
+    #: D — the ENROLLED population the window was sampled from (sampled
+    #: participation only; 0 = resident, the window is the population).
+    #: Static so specs and cost models can price K vs D without tracing it.
+    num_enrolled: int = 0
 
     @property
     def num_clients(self) -> int:
-        """D — the size of the client axis this round mixes over."""
+        """D — the size of the client axis this round mixes over (the
+        WINDOW size K on the sampled path; ``num_enrolled`` carries the
+        full population there)."""
         return int(self.survive.shape[0])
 
     def replace(self, **changes) -> "RoundContext":
@@ -78,9 +95,10 @@ class RoundContext:
 
 jax.tree_util.register_dataclass(
     RoundContext,
-    data_fields=("key", "round_index", "survive", "counts", "cluster_ids"),
+    data_fields=("key", "round_index", "survive", "counts", "cluster_ids",
+                 "active_ids"),
     meta_fields=("num_clusters", "do_global_sync", "topology", "mesh_info",
-                 "codec"),
+                 "codec", "num_enrolled"),
 )
 
 
@@ -104,7 +122,8 @@ def concrete_cluster_ids(cluster_ids, *, hint: str) -> np.ndarray:
 def make_context(*, key=None, round_index=0, survive=None, counts=None,
                  cluster_ids=None, num_clusters: Optional[int] = None,
                  do_global_sync: bool = True, topology: Optional[Topology] = None,
-                 mesh_info=None, codec=None, num_clients: Optional[int] = None
+                 mesh_info=None, codec=None, num_clients: Optional[int] = None,
+                 active_ids=None, num_enrolled: int = 0
                  ) -> RoundContext:
     """Build a RoundContext, defaulting every unspecified field.
 
@@ -144,5 +163,7 @@ def make_context(*, key=None, round_index=0, survive=None, counts=None,
     return RoundContext(
         key=key, round_index=jnp.asarray(round_index, jnp.int32),
         survive=survive, counts=counts, cluster_ids=cluster_ids,
+        active_ids=active_ids,
         num_clusters=int(num_clusters), do_global_sync=bool(do_global_sync),
-        topology=topology, mesh_info=mesh_info, codec=codec)
+        topology=topology, mesh_info=mesh_info, codec=codec,
+        num_enrolled=int(num_enrolled))

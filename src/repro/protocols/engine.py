@@ -28,6 +28,7 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compression
 from repro.config import FLConfig
@@ -53,7 +54,7 @@ def _check_mix_path(mix_path: str) -> str:
 
 
 def _resolve_spec(proto: Protocol, ctx, mix_path: str):
-    """The one mix_path dispatch rule both engines share: the protocol's
+    """The one mix_path dispatch rule all engines share: the protocol's
     structured MixingSpec unless the path is 'dense'; 'sparse' refuses to
     silently fall back when no spec exists."""
     if mix_path == "dense":
@@ -64,6 +65,34 @@ def _resolve_spec(proto: Protocol, ctx, mix_path: str):
             f"protocol {proto.name!r} provides no mixing_spec; "
             "mix_path='sparse' is unavailable (use 'auto' or 'dense')")
     return spec
+
+
+def mix_flat(proto: Protocol, flat_new, flat_old, ctx, codec_state, *,
+             mix_path: str, codec, use_pallas):
+    """One mixing application on a packed [P, sum(sizes)] buffer — the
+    shared seam of ``DenseEngine`` (resident rounds) and ``SampledEngine``
+    (active-window rounds): structured-spec kernels on the sparse path,
+    the dense (M_new, M_old) contraction otherwise; the codec wire sits
+    identically in front of both. Always returns ``(flat, codec_state)``."""
+    spec = _resolve_spec(proto, ctx, mix_path)
+    if spec is not None:
+        if codec is None:
+            out = apply_spec_flat(spec, flat_new, flat_old,
+                                  use_pallas=use_pallas)
+            return out, codec_state
+        return apply_spec_flat(
+            spec, flat_new, flat_old, codec=codec, codec_state=codec_state,
+            key=jax.random.fold_in(ctx.key, 0x636F6465),
+            use_pallas=use_pallas)
+    M_new, M_old = proto.mixing_matrix(ctx)
+    if codec is None:
+        out = kernel_ops.fed_mix_flat(M_new, M_old, flat_new, flat_old,
+                                      use_pallas=use_pallas)
+        return out, codec_state
+    return kernel_ops.fed_mix_flat(
+        M_new, M_old, flat_new, flat_old, codec=codec,
+        codec_state=codec_state, key=jax.random.fold_in(ctx.key, 0x636F6465),
+        use_pallas=use_pallas)
 
 
 # ---------------------------------------------------------------------------
@@ -204,42 +233,25 @@ class DenseEngine:
         return flat[0], spec
 
     def _mix_flat(self, flat_new, flat_old, ctx, cstate):
-        """One mixing application on the packed [P, sum(sizes)] carry:
-        structured-spec kernels on the sparse path, the dense (M_new,
-        M_old) contraction otherwise; the codec wire sits identically in
-        front of both. Always returns ``(flat, codec_state)``."""
-        spec = _resolve_spec(self.proto, ctx, self.mix_path)
-        if spec is not None:
-            if self.codec is None:
-                out = apply_spec_flat(spec, flat_new, flat_old,
-                                      use_pallas=self.mix_use_pallas)
-                return out, cstate
-            return apply_spec_flat(
-                spec, flat_new, flat_old, codec=self.codec,
-                codec_state=cstate,
-                key=jax.random.fold_in(ctx.key, 0x636F6465),
-                use_pallas=self.mix_use_pallas)
-        M_new, M_old = self.proto.mixing_matrix(ctx)
-        if self.codec is None:
-            out = kernel_ops.fed_mix_flat(M_new, M_old, flat_new, flat_old,
-                                          use_pallas=self.mix_use_pallas)
-            return out, cstate
-        return kernel_ops.fed_mix_flat(
-            M_new, M_old, flat_new, flat_old, codec=self.codec,
-            codec_state=cstate, key=jax.random.fold_in(ctx.key, 0x636F6465),
-            use_pallas=self.mix_use_pallas)
+        """One mixing application on the packed [P, sum(sizes)] carry (the
+        module-level ``mix_flat`` seam with this engine's knobs bound)."""
+        return mix_flat(self.proto, flat_new, flat_old, ctx, cstate,
+                        mix_path=self.mix_path, codec=self.codec,
+                        use_pallas=self.mix_use_pallas)
 
     # -- one round -----------------------------------------------------
-    def _round_flat(self, spec, flat_params, key, round_index=0,
+    def _round_rows(self, spec, flat_params, key, round_index=0,
                     codec_state=None):
-        """One protocol round on the packed carry: ``flat_params`` is the
-        flat [sum(sizes)] global model, ``spec`` its TreeSpec. The round's
-        federated state stays a flat [P, sum(sizes)] buffer end-to-end —
-        the round-start state is a broadcast of the carry (packed once per
-        run, not once per sub-round mix), every mixing / codec /
-        error-feedback application runs on the flat buffer, and local
-        training vmaps over unpacked views. Returns ``(flat', mean_loss[,
-        codec_state])``."""
+        """One protocol round on the packed carry, stopping BEFORE the
+        consensus collapse: ``flat_params`` is the flat [sum(sizes)] global
+        model, ``spec`` its TreeSpec. The round's federated state stays a
+        flat [P, sum(sizes)] buffer end-to-end — the round-start state is a
+        broadcast of the carry (packed once per run, not once per sub-round
+        mix), every mixing / codec / error-feedback application runs on the
+        flat buffer, and local training vmaps over unpacked views. Returns
+        the mixed PER-CLIENT rows ``(flat_mixed [P, sum(sizes)], losses,
+        codec_state)`` — the resident reference the sampled window round is
+        pinned against bit-for-bit."""
         proto, fl = self.proto, self.fl
         P = proto.num_participants(fl)
         L = proto.num_clusters(fl)
@@ -275,6 +287,15 @@ class DenseEngine:
 
         flat_mixed, cstate = self._mix_flat(flat_cp, flat_old,
                                             ctx_for(sub_rounds, True), cstate)
+        return flat_mixed, losses, cstate
+
+    def _round_flat(self, spec, flat_params, key, round_index=0,
+                    codec_state=None):
+        """``_round_rows`` + the consensus collapse: the reported global
+        model is the mean over the mixed client rows. Returns ``(flat',
+        mean_loss[, codec_state])``."""
+        flat_mixed, losses, cstate = self._round_rows(
+            spec, flat_params, key, round_index, codec_state)
         # consensus collapse in each LEAF's dtype (mean_packed), exactly as
         # the unpacked program computed it — a whole-buffer mean would
         # accumulate bf16 leaves in the promoted dtype
@@ -407,6 +428,216 @@ class DenseEngine:
         P = self.proto.num_participants(self.fl)
         total = sum(int(leaf.size) for leaf in jax.tree.leaves(params))
         return jnp.zeros((P, total), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Sampled engine — persistent store + per-round active window
+# ---------------------------------------------------------------------------
+
+class SampledEngine:
+    """Drives protocol rounds over a persistent ``ClientStateStore``
+    (``protocols.store``): D clients are ENROLLED but only K are ACTIVE per
+    round. Each round —
+
+      1. select    — the first-class participation strategy
+                     (``fl.participation_strategy``) draws [K] active ids
+                     from the D-client population; O(D) vector work that
+                     runs OUTSIDE the compiled window program;
+      2. gather    — the store yields the active [K, sum(sizes)] rows (and
+                     their codec residuals) through the shared
+                     ``kernels.ops`` gather seam;
+      3. window    — ONE compiled round on [K, sum(sizes)] only: per-row
+                     local SGD from each client's OWN persistent state (no
+                     broadcast, no consensus collapse), then the
+                     spec-lowered mix over the window via the same
+                     ``mix_flat`` seam ``DenseEngine`` uses, with the
+                     window's RoundContext carrying ``active_ids`` and
+                     ``num_enrolled``;
+      4. scatter   — mixed rows (and residuals) write back; the store's
+                     ``last_round`` staleness counters advance.
+
+    The compiled program never sees D: enrolling 10^6 clients costs
+    storage, not compute — per-round compiled cost matches a RESIDENT
+    K-client engine (the ``state-residency`` analysis rule and the
+    benchmark's sampled sweep pin this).
+
+    With ``active_ids = arange(D)`` (and the store freshly initialized from
+    one global model) a window round is bit-for-bit the resident
+    ``DenseEngine`` round at matching selections — pinned by
+    tests/test_sampled_engine.py.
+    """
+
+    def __init__(self, net: PaperNetConfig, data_dev: Dict, fl: FLConfig,
+                 proto: Protocol, topology: Optional[Topology] = None, *,
+                 mix_use_pallas: Optional[bool] = None, codec=None,
+                 mix_path: Optional[str] = None):
+        from repro.protocols.base import (
+            get_participation, validate_participation)
+        self.net, self.fl, self.proto = net, fl, proto
+        self.topology = topology
+        self.data_dev = data_dev
+        self.mix_use_pallas = mix_use_pallas
+        self.mix_path = _check_mix_path(mix_path or fl.mix_path)
+        self.codec = compression.active(codec)
+        #: D — enrolled population; K — active window per round
+        self.num_enrolled = fl.enrolled
+        self.window = validate_participation(fl, proto)
+        #: static window cluster layout — the protocol's own mesh
+        #: assignment at width K (validate_participation proved it exists)
+        self._cluster_ids = proto.mesh_cluster_ids(self.window, fl)
+        self._num_clusters = (int(self._cluster_ids.max()) + 1
+                              if self._cluster_ids.size else 1)
+        self._data_clients = int(
+            jax.tree.leaves(data_dev["counts"])[0].shape[0])
+        local_train = make_local_trainer(net, fl)
+        self._vtrain_per = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0))
+        strategy = get_participation(fl.participation_strategy)
+        #: jitted [K]-id draw over the FULL enrolled population — the only
+        #: O(D) compute of a round, outside the window program
+        self.select_fn = jax.jit(
+            lambda k: strategy.select(k, self.num_enrolled, self.window, fl))
+        donate = (() if jax.default_backend() == "cpu"
+                  else self._donate_argnums)
+        #: jitted (flat_win, active_ids, k_tr, k_str, k_mix, round_index
+        #: [, codec_state]) -> (flat_mixed, mean_loss[, codec_state]) —
+        #: every operand is [K, sum(sizes)] or smaller; D never enters
+        self.window_fn = jax.jit(self._window_round, donate_argnums=donate)
+        self.store = None
+        self._spec = None
+
+    #: donation target of ``window_fn``: the gathered window (invar 0) is a
+    #: fresh per-round buffer the store never reads again
+    _donate_argnums = (0,)
+
+    # -- store lifecycle -----------------------------------------------
+    def init_params(self, seed: int = 0):
+        return init_paper_net(jax.random.PRNGKey(seed), self.net)
+
+    def init_store(self, params, *, tier: str = "auto", mesh_info=None,
+                   store=None):
+        """Enroll D clients, every one starting at ``params``: packs the
+        global model once and builds (or adopts) the backing store. The
+        TreeSpec captured here is the engine's packed layout for every
+        subsequent window round."""
+        from repro.protocols import store as store_mod
+        flat, spec = kernel_ops.pack_tree(
+            jax.tree.map(lambda p: p[None], params))
+        self._spec = spec
+        if store is not None:
+            if store.width != flat.shape[-1]:
+                raise ValueError(
+                    f"store width {store.width} does not match the packed "
+                    f"model width {flat.shape[-1]}")
+            self.store = store
+            return store
+        self.store = store_mod.make_store(
+            flat[0], self.num_enrolled, tier=tier, mesh_info=mesh_info,
+            residual=self._codec_stateful)
+        return self.store
+
+    @property
+    def _codec_stateful(self) -> bool:
+        return self.codec is not None and self.codec.stateful
+
+    # -- the compiled window round -------------------------------------
+    def _window_round(self, flat_win, active_ids, k_tr, k_str, k_mix,
+                      round_index=0, codec_state=None):
+        """One round on the [K, sum(sizes)] active window. ``flat_win``
+        rows are the clients' persistent states: training starts from them
+        per-row and mixing falls back to them for stragglers — the sampled
+        analogue of ``DenseEngine._round_flat``'s broadcast carry, sharing
+        its sub_rounds structure and the ``mix_flat`` seam. Client i's
+        dataset is data row ``active_ids[i] % data_clients`` (enrollment
+        can exceed the dataset's client count; the shard map is cyclic)."""
+        fl, K = self.fl, self.window
+        sel_data = active_ids % self._data_clients
+        cx, cy, cm, counts = _gather_clients(self.data_dev, sel_data)
+        smask = straggler_mask(k_str, K, fl.straggler_rate)
+        flat_old = flat_win
+
+        def ctx_for(sub_round: int, sync: bool):
+            return make_context(
+                key=jax.random.fold_in(k_mix, sub_round),
+                round_index=round_index, survive=smask, counts=counts,
+                cluster_ids=jnp.asarray(self._cluster_ids),
+                num_clusters=self._num_clusters, do_global_sync=sync,
+                topology=self.topology, active_ids=active_ids,
+                num_enrolled=self.num_enrolled)
+
+        def mix(flat_new, ctx, cstate):
+            return mix_flat(self.proto, flat_new, flat_old, ctx, cstate,
+                            mix_path=self.mix_path, codec=self.codec,
+                            use_pallas=self.mix_use_pallas)
+
+        flat_cp, losses = None, jnp.zeros(())
+        cstate = codec_state
+        sub_rounds = max(1, fl.sync_period)
+        for r in range(sub_rounds):
+            keys = jax.random.split(jax.random.fold_in(k_tr, r), K)
+            if flat_cp is None:
+                flat_start = flat_win
+            else:
+                flat_start, cstate = mix(flat_cp, ctx_for(r, False), cstate)
+            start = kernel_ops.unpack_tree(flat_start, self._spec)
+            cp, losses = self._vtrain_per(start, cx, cy, cm, keys)
+            flat_cp = kernel_ops.pack_tree(cp)[0]
+
+        flat_mixed, cstate = mix(flat_cp, ctx_for(sub_rounds, True), cstate)
+        if self._codec_stateful:
+            return flat_mixed, jnp.mean(losses), cstate
+        return flat_mixed, jnp.mean(losses)
+
+    # -- host driver ----------------------------------------------------
+    def round(self, key, round_index: int = 0):
+        """One sampled round against the store: select -> gather -> window
+        -> scatter/touch. The key splits exactly as ``DenseEngine._round_
+        flat`` (k_sel, k_tr, k_str, k_mix), so at ``num_enrolled ==
+        num_clients`` and K == P the same key drives the same selection
+        and the same round program. Returns the round's mean train loss
+        (device scalar)."""
+        if self.store is None:
+            raise ValueError("SampledEngine.round: call init_store(params) "
+                             "first — the engine has no enrolled state")
+        k_sel, k_tr, k_str, k_mix = jax.random.split(key, 4)
+        active_ids = self.select_fn(k_sel)
+        ids_np = np.asarray(active_ids)
+        flat_win = self.store.gather(ids_np)
+        if self._codec_stateful:
+            res = self.store.gather_residual(ids_np)
+            flat_mixed, loss, res = self.window_fn(
+                flat_win, active_ids, k_tr, k_str, k_mix,
+                jnp.asarray(round_index, jnp.int32), res)
+            self.store.scatter_residual(ids_np, np.asarray(res))
+        else:
+            flat_mixed, loss = self.window_fn(
+                flat_win, active_ids, k_tr, k_str, k_mix,
+                jnp.asarray(round_index, jnp.int32))
+        self.store.scatter(ids_np, np.asarray(flat_mixed))
+        self.store.touch(ids_np, round_index)
+        return loss
+
+    def run_rounds(self, key, T: int):
+        """Run T sampled rounds against the store (a host loop — the store
+        is host-owned state; each round's WINDOW is one compiled program).
+        Returns metrics with the [T] per-round mean train losses."""
+        losses = []
+        for t in range(int(T)):
+            losses.append(self.round(jax.random.fold_in(key, t),
+                                     round_index=t))
+        return {"train_loss": np.asarray(jax.device_get(losses))}
+
+    def global_params(self):
+        """Consensus readout: the mean over ALL enrolled rows, unpacked to
+        the model pytree. On the resident tier this is exactly the dense
+        engine's per-leaf-dtype ``mean_packed`` collapse; the cold tier
+        uses the store's analytic overlay+base mean."""
+        if self.store is None:
+            raise ValueError("SampledEngine.global_params: no store")
+        if hasattr(self.store, "flat"):
+            row = kernel_ops.mean_packed(self.store.flat, self._spec)
+        else:
+            row = jnp.asarray(self.store.consensus())
+        return kernel_ops.unpack_tree(row, self._spec)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,293 @@
+"""ClientStateStore — the persistent [D, sum(sizes)] client state behind
+sampled participation.
+
+The resident engines (``DenseEngine``/``MeshEngine``) hold the WHOLE
+federated state as the scan carry: every enrolled client is a live row of
+the compiled program, so D is capped by device memory and every round pays
+O(D) compute even when only K << D clients train. This module inverts that:
+client state lives in a host-owned store, and each round the
+``SampledEngine`` gathers a K-row *active window*, runs the compiled
+window round on [K, sum(sizes)] only, and scatters the mixed rows back.
+Enrollment D then only prices storage — the compiled per-round program is
+D-independent (the ``state-residency`` analysis rule pins this).
+
+Tiers (``make_store`` picks by footprint):
+
+* ``MemoryStore``     — one packed [D, sum(sizes)] device buffer;
+                        gather/scatter are the ``kernels.ops``
+                        ``gather_rows``/``scatter_rows`` seam. Optionally
+                        sharded over the mesh data axes (multi-host
+                        placement is ROADMAP item 5).
+* ``CheckpointStore`` — cold tier for D where [D, sum(sizes)] can never
+                        materialize (D=10^6 x a 2M-param model is ~8 TB):
+                        untouched clients implicitly hold a single shared
+                        ``base_row`` (or a row of an on-disk npz checkpoint
+                        read via ``checkpoint.io.load_leaves`` partial-row
+                        reads), and only rows a round actually touched are
+                        held in a host overlay dict. Memory scales with
+                        rounds x K, not D.
+
+Both tiers carry per-client error-feedback/codec residuals (same
+gather/scatter window discipline, f32, zeros for untouched clients) and
+round-staleness counters (``last_round``/``staleness``) — the bookkeeping
+async/debiasing extensions need lives with the state, not the engine.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_leaves, save_checkpoint
+from repro.kernels import ops as kernel_ops
+
+#: footprint (bytes of [D, sum(sizes)] at f32) above which ``make_store``
+#: refuses to materialize a resident buffer and drops to the cold tier
+MEMORY_TIER_MAX_BYTES = 2 ** 31
+
+
+class ClientStateStore:
+    """Base contract: [D, width] persistent per-client rows + residuals +
+    staleness. ``gather``/``scatter`` move [K, width] windows; ids are
+    concrete host arrays (selection runs OUTSIDE the compiled window
+    program — that is the whole point)."""
+
+    def __init__(self, num_enrolled: int, width: int):
+        if num_enrolled <= 0:
+            raise ValueError(f"ClientStateStore: num_enrolled must be "
+                             f"positive, got {num_enrolled}")
+        self.num_enrolled = int(num_enrolled)
+        self.width = int(width)
+        #: [D] round index each client last trained in; -1 = never touched
+        self.last_round = np.full((self.num_enrolled,), -1, np.int32)
+
+    # -- window movement ------------------------------------------------
+    def gather(self, ids) -> jnp.ndarray:
+        """[K, width] rows for the active ids."""
+        raise NotImplementedError
+
+    def scatter(self, ids, rows) -> None:
+        """Write the mixed [K, width] window back at the active ids."""
+        raise NotImplementedError
+
+    # -- per-client codec residuals ------------------------------------
+    def gather_residual(self, ids) -> jnp.ndarray:
+        """[K, width] f32 error-feedback residuals (zeros for clients the
+        wire never touched)."""
+        raise NotImplementedError
+
+    def scatter_residual(self, ids, rows) -> None:
+        raise NotImplementedError
+
+    # -- staleness bookkeeping -----------------------------------------
+    def _check_ids(self, ids) -> np.ndarray:
+        ids = np.asarray(ids)
+        if ids.ndim != 1:
+            raise ValueError(f"store ids must be 1-D, got shape {ids.shape}")
+        bad = ids[(ids < 0) | (ids >= self.num_enrolled)]
+        if bad.size:
+            raise IndexError(
+                f"store ids {bad[:4].tolist()} out of range for "
+                f"num_enrolled={self.num_enrolled}")
+        return ids
+
+    def touch(self, ids, round_index: int) -> None:
+        """Mark the active ids as trained in ``round_index``."""
+        self.last_round[self._check_ids(ids)] = int(round_index)
+
+    def staleness(self, round_index: int) -> np.ndarray:
+        """[D] rounds since each client last trained (never-touched clients
+        read ``round_index + 1`` — stale since before round 0)."""
+        return np.asarray(int(round_index) - self.last_round, np.int32)
+
+
+class MemoryStore(ClientStateStore):
+    """Resident tier: the full [D, width] packed state as ONE device
+    buffer, windowed through the shared ``gather_rows``/``scatter_rows``
+    seam. ``mesh_info`` shards the row axis over the data mesh axes."""
+
+    def __init__(self, flat: jnp.ndarray, *, mesh_info=None,
+                 residual: bool = False):
+        if getattr(flat, "ndim", 0) != 2:
+            raise ValueError(
+                f"MemoryStore: expected a packed [D, sum(sizes)] buffer, "
+                f"got shape {getattr(flat, 'shape', ())}")
+        super().__init__(flat.shape[0], flat.shape[1])
+        self._sharding = None
+        if mesh_info is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            ax = (mesh_info.dp_axes if len(mesh_info.dp_axes) > 1
+                  else mesh_info.dp_axes[0])
+            self._sharding = NamedSharding(mesh_info.mesh, P(ax, None))
+            flat = jax.device_put(flat, self._sharding)
+        self._flat = flat
+        self._residual = (jnp.zeros(flat.shape, jnp.float32)
+                          if residual else None)
+
+    @property
+    def flat(self) -> jnp.ndarray:
+        """The live [D, width] buffer (resident tier only)."""
+        return self._flat
+
+    def gather(self, ids) -> jnp.ndarray:
+        return kernel_ops.gather_rows(self._flat,
+                                      jnp.asarray(self._check_ids(ids)))
+
+    def scatter(self, ids, rows) -> None:
+        self._flat = kernel_ops.scatter_rows(
+            self._flat, jnp.asarray(self._check_ids(ids)), jnp.asarray(rows))
+
+    def gather_residual(self, ids) -> jnp.ndarray:
+        if self._residual is None:
+            raise ValueError("MemoryStore was built without residual=True; "
+                             "no codec residual tier to gather")
+        return kernel_ops.gather_rows(self._residual,
+                                      jnp.asarray(self._check_ids(ids)))
+
+    def scatter_residual(self, ids, rows) -> None:
+        if self._residual is None:
+            raise ValueError("MemoryStore was built without residual=True; "
+                             "no codec residual tier to scatter")
+        self._residual = kernel_ops.scatter_rows(
+            self._residual, jnp.asarray(self._check_ids(ids)),
+            jnp.asarray(rows, jnp.float32))
+
+    def consensus(self) -> np.ndarray:
+        """[width] mean over all enrolled rows (the global-model readout)."""
+        return np.asarray(jnp.mean(self._flat.astype(jnp.float32), axis=0))
+
+
+class CheckpointStore(ClientStateStore):
+    """Cold tier: untouched clients hold a shared base row implicitly;
+    touched rows live in a host overlay dict. ``base`` is either a [width]
+    row (fresh enrollment: every client starts at the global init) or a
+    path to an npz checkpoint holding one [D, width] leaf, whose rows are
+    fetched on demand with ``checkpoint.io.load_leaves`` partial-row reads
+    — a K-row gather out of a D=10^6-row file reads K rows, not D."""
+
+    def __init__(self, base, num_enrolled: int, *, width: Optional[int] = None,
+                 dtype=jnp.float32):
+        if isinstance(base, (str, os.PathLike)):
+            self._base_path: Optional[str] = os.fspath(base)
+            self._base_row: Optional[np.ndarray] = None
+            if width is None:
+                probe, _ = load_leaves(self._base_path, np.array([0]))
+                width = probe[0].shape[-1]
+                dtype = probe[0].dtype
+        else:
+            row = np.asarray(base)
+            if row.ndim != 1:
+                raise ValueError(
+                    f"CheckpointStore: base must be a [sum(sizes)] row or an "
+                    f"npz path, got shape {row.shape}")
+            self._base_path = None
+            self._base_row = row
+            width, dtype = row.shape[0], row.dtype
+        super().__init__(num_enrolled, width)
+        self.dtype = np.dtype(dtype)
+        #: touched rows only: {client id -> [width] np row}
+        self._overlay: Dict[int, np.ndarray] = {}
+        self._residual_overlay: Dict[int, np.ndarray] = {}
+
+    @property
+    def num_touched(self) -> int:
+        return len(self._overlay)
+
+    def _base_rows(self, ids: np.ndarray) -> np.ndarray:
+        if self._base_row is not None:
+            return np.broadcast_to(self._base_row,
+                                   (ids.size, self.width)).copy()
+        leaves, _ = load_leaves(self._base_path, ids)
+        return np.asarray(leaves[0])
+
+    def gather(self, ids) -> jnp.ndarray:
+        ids = self._check_ids(ids)
+        cold = np.array([i for i, c in enumerate(ids)
+                         if int(c) not in self._overlay], np.int64)
+        out = np.empty((ids.size, self.width), self.dtype)
+        if cold.size:
+            out[cold] = self._base_rows(ids[cold])
+        for i, c in enumerate(ids):
+            row = self._overlay.get(int(c))
+            if row is not None:
+                out[i] = row
+        return jnp.asarray(out)
+
+    def scatter(self, ids, rows) -> None:
+        ids = self._check_ids(ids)
+        rows = np.asarray(rows, self.dtype)
+        if rows.shape != (ids.size, self.width):
+            raise ValueError(
+                f"CheckpointStore.scatter: window shape {rows.shape} does "
+                f"not match ({ids.size}, {self.width})")
+        for i, c in enumerate(ids):
+            self._overlay[int(c)] = rows[i].copy()
+
+    def gather_residual(self, ids) -> jnp.ndarray:
+        ids = self._check_ids(ids)
+        out = np.zeros((ids.size, self.width), np.float32)
+        for i, c in enumerate(ids):
+            row = self._residual_overlay.get(int(c))
+            if row is not None:
+                out[i] = row
+        return jnp.asarray(out)
+
+    def scatter_residual(self, ids, rows) -> None:
+        ids = self._check_ids(ids)
+        rows = np.asarray(rows, np.float32)
+        for i, c in enumerate(ids):
+            self._residual_overlay[int(c)] = rows[i].copy()
+
+    def consensus(self) -> np.ndarray:
+        """[width] mean over all enrolled rows without materializing them:
+        touched rows sum explicitly, the (D - touched) untouched clients
+        contribute the base row analytically. Requires a base *row* (a
+        checkpoint-backed base would need a full-file pass)."""
+        if self._base_row is None:
+            raise NotImplementedError(
+                "consensus over a checkpoint-backed base requires a full "
+                "pass over the state file; hold a base row instead")
+        acc = np.zeros((self.width,), np.float64)
+        for row in self._overlay.values():
+            acc += np.asarray(row, np.float64)
+        acc += (self.num_enrolled - len(self._overlay)) * np.asarray(
+            self._base_row, np.float64)
+        return (acc / self.num_enrolled).astype(self.dtype)
+
+    def save(self, ckpt_dir: str, step: int) -> str:
+        """Materialize overlay + base into one [D, width] checkpoint —
+        ONLY sensible at small D (tests, tier migration); at cold-tier D
+        this would allocate the very buffer the tier exists to avoid."""
+        full = np.broadcast_to(self._base_row,
+                               (self.num_enrolled, self.width)).copy()
+        for c, row in self._overlay.items():
+            full[c] = row
+        return save_checkpoint(ckpt_dir, step, {"state": full},
+                               metadata={"num_enrolled": self.num_enrolled})
+
+
+def make_store(base_row, num_enrolled: int, *, tier: str = "auto",
+               mesh_info=None, residual: bool = False) -> ClientStateStore:
+    """Build the right tier for D=``num_enrolled`` clients all starting at
+    ``base_row`` ([sum(sizes)], the packed global init): a resident
+    ``MemoryStore`` while [D, width] fits ``MEMORY_TIER_MAX_BYTES``, the
+    overlay-backed ``CheckpointStore`` beyond (where materializing the
+    buffer is exactly the failure mode the store exists to remove)."""
+    if tier not in ("auto", "memory", "checkpoint"):
+        raise ValueError(f"unknown store tier {tier!r}; expected one of "
+                         "auto, memory, checkpoint")
+    row = jnp.asarray(base_row)
+    if row.ndim != 1:
+        raise ValueError(f"make_store: base_row must be a packed "
+                         f"[sum(sizes)] row, got shape {row.shape}")
+    nbytes = int(num_enrolled) * int(row.shape[0]) * row.dtype.itemsize
+    if residual:                       # f32 residual tier rides along
+        nbytes += int(num_enrolled) * int(row.shape[0]) * 4
+    if tier == "memory" or (tier == "auto" and nbytes <= MEMORY_TIER_MAX_BYTES):
+        flat = jnp.broadcast_to(row[None], (int(num_enrolled), row.shape[0]))
+        return MemoryStore(jnp.array(flat), mesh_info=mesh_info,
+                           residual=residual)
+    return CheckpointStore(np.asarray(row), num_enrolled)

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.io import (
-    _retain, latest_step, load_checkpoint, save_checkpoint,
+    _retain, latest_step, load_checkpoint, load_leaves, save_checkpoint,
 )
 
 
@@ -56,3 +56,53 @@ def test_save_checkpoint_rejects_nonpositive_keep(tmp_path):
     with pytest.raises(ValueError, match="keep >= 1"):
         save_checkpoint(str(tmp_path), 1, _tree(), keep=0)
     assert latest_step(str(tmp_path)) is None
+
+
+# ---- load_leaves: partial-row reads (the CheckpointStore cold-tier I/O) --
+
+
+def _rowy_tree(rows=16, seed=3):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(rows, 5)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(rows,)).astype(np.float32)
+                         ).astype(jnp.bfloat16),
+    }
+
+
+def test_load_leaves_matches_full_load(tmp_path):
+    tree = _rowy_tree()
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    idx = [3, 0, 11, 3]                       # out of order + repeated
+    leaves, meta = load_leaves(path, idx)
+    full, _ = load_checkpoint(str(tmp_path), tree)
+    # leaves come back in tree_flatten order (sorted keys: b, w)
+    np.testing.assert_array_equal(np.asarray(leaves[0], np.float32),
+                                  np.asarray(full["b"], np.float32)[idx])
+    np.testing.assert_array_equal(leaves[1], np.asarray(full["w"])[idx])
+    assert meta["step"] == 1
+
+
+def test_load_leaves_restores_bf16_dtype(tmp_path):
+    """bf16 leaves are stored as uint16 views; partial reads must hand back
+    bf16 (bit-identical to the saved rows), not the storage view."""
+    import ml_dtypes
+    tree = _rowy_tree()
+    path = save_checkpoint(str(tmp_path), 2, tree)
+    leaves, _ = load_leaves(path, np.arange(16))
+    assert leaves[0].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        leaves[0].view(np.uint16),
+        np.asarray(tree["b"]).view(np.uint16))
+
+
+def test_load_leaves_out_of_range_raises(tmp_path):
+    path = save_checkpoint(str(tmp_path), 3, _rowy_tree())
+    with pytest.raises(IndexError, match="out of range"):
+        load_leaves(path, [0, 16])
+
+
+def test_load_leaves_requires_1d_indices(tmp_path):
+    path = save_checkpoint(str(tmp_path), 4, _rowy_tree())
+    with pytest.raises(ValueError, match="1-D"):
+        load_leaves(path, [[0, 1]])

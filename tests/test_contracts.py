@@ -359,8 +359,9 @@ def test_checked_in_baseline_covers_full_matrix():
         for codec in ("none", "int8"):
             for mp in ("dense", "sparse"):
                 assert f"dense/{proto}/{mp}/{codec}/round" in contracts
+                assert f"sampled/{proto}/{mp}/{codec}/round" in contracts
             assert f"mesh/{proto}/psum/{codec}/round" in contracts
-    assert len(contracts) == 60
+    assert len(contracts) == 80
     # every mesh contract's static payload equals its analytic pricing —
     # the parity acceptance criterion, re-checked from the artifact
     for name, c in contracts.items():
@@ -401,8 +402,9 @@ def test_cli_update_baseline_roundtrip(tmp_path):
 
 
 def test_cli_subprocess_full_matrix_matches_baseline(tmp_path):
-    """End to end as CI runs it: both engines, both codecs, mix-path both,
-    diffed against the checked-in baseline — exit 0 and zero regressions."""
+    """End to end as CI runs it: all three engines, both codecs, mix-path
+    both, diffed against the checked-in baseline — exit 0, no
+    regressions."""
     out = tmp_path / "ANALYSIS.json"
     diff = tmp_path / "CONTRACTS_DIFF.md"
     env = dict(os.environ)
@@ -414,7 +416,7 @@ def test_cli_subprocess_full_matrix_matches_baseline(tmp_path):
         capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     doc = json.loads(out.read_text())
-    assert doc["ok"] and len(doc["contracts"]) == 60
+    assert doc["ok"] and len(doc["contracts"]) == 80
     assert doc["contract_diff"]["ok"]
-    assert doc["contract_diff"]["compared"] == 60
+    assert doc["contract_diff"]["compared"] == 80
     assert "No contract regressions" in diff.read_text()

@@ -1,0 +1,182 @@
+"""protocols/store: the persistent client-state tiers behind sampled
+participation — window gather/scatter round-trips, residual gating, the
+overlay cold tier (incl. the load_leaves-backed path), staleness counters,
+and make_store tier selection."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.protocols import (
+    CheckpointStore, MemoryStore, make_store,
+)
+from repro.protocols.store import MEMORY_TIER_MAX_BYTES
+
+D, W, K = 32, 7, 5
+
+
+def _flat(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(D, W)).astype(np.float32))
+
+
+def _ids():
+    return np.array([4, 0, 31, 9, 4], np.int32)   # unordered + repeated
+
+
+# ---- MemoryStore --------------------------------------------------------
+
+
+def test_memory_gather_scatter_roundtrip():
+    store = MemoryStore(_flat())
+    ids = _ids()
+    win = store.gather(ids)
+    np.testing.assert_array_equal(np.asarray(win),
+                                  np.asarray(store.flat)[ids])
+    new = win + 1.0
+    store.scatter(ids, new)
+    np.testing.assert_array_equal(np.asarray(store.gather(ids[:4])),
+                                  np.asarray(new)[:4])
+    # untouched rows unchanged
+    untouched = np.setdiff1d(np.arange(D), ids)
+    np.testing.assert_array_equal(np.asarray(store.flat)[untouched],
+                                  np.asarray(_flat())[untouched])
+
+
+def test_memory_requires_packed_2d():
+    with pytest.raises(ValueError, match=r"packed \[D, sum\(sizes\)\]"):
+        MemoryStore(jnp.zeros((D,)))
+
+
+def test_memory_residual_gated():
+    store = MemoryStore(_flat())
+    with pytest.raises(ValueError, match="without residual=True"):
+        store.gather_residual(_ids())
+    store = MemoryStore(_flat(), residual=True)
+    np.testing.assert_array_equal(np.asarray(store.gather_residual(_ids())),
+                                  np.zeros((K, W), np.float32))
+    store.scatter_residual(_ids()[:2], np.ones((2, W)))
+    assert float(store.gather_residual(np.array([4]))[0, 0]) == 1.0
+
+
+def test_memory_consensus_is_row_mean():
+    store = MemoryStore(_flat())
+    np.testing.assert_allclose(store.consensus(),
+                               np.asarray(_flat()).mean(axis=0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("ids,err", [
+    (np.array([0, D]), IndexError),           # out of range
+    (np.array([[0, 1]]), ValueError),         # not 1-D
+])
+def test_store_id_validation(ids, err):
+    with pytest.raises(err):
+        MemoryStore(_flat()).gather(ids)
+
+
+# ---- CheckpointStore ----------------------------------------------------
+
+
+def test_checkpoint_overlay_gather_scatter():
+    base = np.arange(W, dtype=np.float32)
+    store = CheckpointStore(base, D)
+    ids = _ids()
+    # cold gather: every row is the base row
+    np.testing.assert_array_equal(np.asarray(store.gather(ids)),
+                                  np.broadcast_to(base, (K, W)))
+    rows = np.random.default_rng(1).normal(size=(K, W)).astype(np.float32)
+    store.scatter(ids, rows)
+    assert store.num_touched == 4                  # id 4 written twice
+    got = np.asarray(store.gather(ids))
+    # the LAST write for the duplicated id wins
+    np.testing.assert_array_equal(got[0], rows[4])
+    np.testing.assert_array_equal(got[1:4], rows[1:4])
+    # untouched clients still read base
+    np.testing.assert_array_equal(
+        np.asarray(store.gather(np.array([7]))), base[None])
+
+
+def test_checkpoint_consensus_analytic():
+    base = np.ones((W,), np.float32)
+    store = CheckpointStore(base, D)
+    store.scatter(np.array([0, 1]), np.full((2, W), 3.0, np.float32))
+    want = (2 * 3.0 + (D - 2) * 1.0) / D
+    np.testing.assert_allclose(store.consensus(), np.full((W,), want),
+                               rtol=1e-6)
+
+
+def test_checkpoint_save_then_partial_read(tmp_path):
+    """save() materializes [D, W]; a path-backed store over that file
+    gathers cold rows via load_leaves partial-row reads."""
+    base = np.arange(W, dtype=np.float32)
+    store = CheckpointStore(base, D)
+    rows = np.full((2, W), 5.0, np.float32)
+    store.scatter(np.array([3, 8]), rows)
+    path = store.save(str(tmp_path), 0)
+    cold = CheckpointStore(path, D)
+    assert cold.width == W and cold.dtype == np.float32
+    got = np.asarray(cold.gather(np.array([3, 7, 8])))
+    np.testing.assert_array_equal(got[0], rows[0])
+    np.testing.assert_array_equal(got[1], base)
+    np.testing.assert_array_equal(got[2], rows[1])
+    with pytest.raises(NotImplementedError, match="full +pass"):
+        cold.consensus()
+
+
+def test_checkpoint_scatter_shape_mismatch():
+    store = CheckpointStore(np.zeros((W,), np.float32), D)
+    with pytest.raises(ValueError, match="does not match"):
+        store.scatter(np.array([0, 1]), np.zeros((2, W + 1)))
+
+
+def test_checkpoint_residual_defaults_zero():
+    store = CheckpointStore(np.zeros((W,), np.float32), D)
+    ids = _ids()
+    np.testing.assert_array_equal(np.asarray(store.gather_residual(ids)),
+                                  np.zeros((K, W), np.float32))
+    store.scatter_residual(ids[:1], np.ones((1, W)))
+    assert float(store.gather_residual(ids[:1]).sum()) == W
+
+
+# ---- staleness ----------------------------------------------------------
+
+
+def test_staleness_counters():
+    store = MemoryStore(_flat())
+    # never-touched clients are stale since before round 0
+    np.testing.assert_array_equal(store.staleness(0), np.ones(D, np.int32))
+    store.touch(np.array([1, 2]), 0)
+    store.touch(np.array([2]), 3)
+    s = store.staleness(4)
+    assert s[1] == 4 and s[2] == 1 and s[0] == 5
+
+
+# ---- make_store tiering -------------------------------------------------
+
+
+def test_make_store_auto_tiers_by_footprint():
+    small = make_store(jnp.zeros((W,), jnp.float32), D)
+    assert isinstance(small, MemoryStore)
+    big_d = MEMORY_TIER_MAX_BYTES // (W * 4) + 1
+    big = make_store(jnp.zeros((W,), jnp.float32), big_d)
+    assert isinstance(big, CheckpointStore)
+    assert big.num_enrolled == big_d
+
+
+def test_make_store_forced_tiers_and_errors():
+    row = jnp.zeros((W,), jnp.float32)
+    assert isinstance(make_store(row, D, tier="checkpoint"), CheckpointStore)
+    assert isinstance(make_store(row, D, tier="memory"), MemoryStore)
+    with pytest.raises(ValueError, match="unknown store tier"):
+        make_store(row, D, tier="cold")
+    with pytest.raises(ValueError, match="base_row"):
+        make_store(jnp.zeros((2, W)), D)
+
+
+def test_make_store_residual_counts_toward_footprint():
+    # D*W*(4+4) just over the line only WITH the residual tier riding along
+    d = MEMORY_TIER_MAX_BYTES // (W * 8) + 1
+    assert isinstance(make_store(jnp.zeros((W,), jnp.float32), d),
+                      MemoryStore)
+    assert isinstance(
+        make_store(jnp.zeros((W,), jnp.float32), d, residual=True),
+        CheckpointStore)
