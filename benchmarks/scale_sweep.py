@@ -96,8 +96,7 @@ def sweep_sampled(name: str, D: int, K: int, n: int, *, iters: int = 3):
     """(window_us, store_us) for one (protocol, enrolled D): the compiled
     [K, n] window mix of a K-active-of-D-enrolled round, plus the host-side
     store gather+scatter that moves the window in and out."""
-    import time
-
+    from benchmarks.common import wallclock
     from repro.protocols import make_store
 
     proto = protocols.get(name)
@@ -127,14 +126,57 @@ def sweep_sampled(name: str, D: int, K: int, n: int, *, iters: int = 3):
 
     store = make_store(jnp.zeros((n,), jnp.float32), D)
     store.scatter(ids_np, np.asarray(xo))       # warm: rows become overlay
-    t_best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
+
+    def store_roundtrip():
         win = store.gather(ids_np)
         jax.block_until_ready(win)
         store.scatter(ids_np, win)
-        t_best = min(t_best, time.perf_counter() - t0)
-    return window_us, t_best * 1e6
+
+    return window_us, wallclock(store_roundtrip, warmup=1, iters=iters)
+
+
+# pipelined-round sweep: a REAL SampledEngine (local SGD + mix, not just
+# the mixing op) driven through run_rounds at growing pipeline_depth —
+# depth 1 is the serial baseline, depths 2-3 overlap store prefetch and
+# retire/scatter with the compiled window. Tiers: the resident MemoryStore
+# (device buffer, D=10^4) and the overlay CheckpointStore (host-owned,
+# D=10^6 — the regime where store I/O sits on the serial critical path).
+PIPELINE_DEPTHS = (1, 2, 3)
+PIPELINE_TIERS = (("resident", "memory", 10 ** 4),
+                  ("checkpoint", "checkpoint", 10 ** 6))
+PIPELINE_ROUNDS = 6
+
+
+def sweep_pipeline(tier: str, D: int, K: int, *, rounds: int = PIPELINE_ROUNDS,
+                   iters: int = 2):
+    """{depth: per-round us} for one store tier at K active of D enrolled."""
+    from benchmarks.common import wallclock
+    from repro.configs.paper_models import LOGREG_SYN
+    from repro.core.simulator import Simulator
+    from repro.data.federated import pack_clients
+    from repro.data.synthetic import syncov
+    from repro.protocols.engine import SampledEngine
+
+    data_clients = 64            # enrollment maps onto data rows cyclically
+    xs, ys = syncov(num_clients=data_clients, seed=0)
+    data = pack_clients(xs, ys, 10, seed=0)
+    # local_epochs picked so the compiled window (stage B) is the same
+    # order as the O(D) select + store fetch (stage A) at D=10^6 — the
+    # regime where a depth-2 pipeline can hide one stage behind the other
+    fl = FLConfig(num_clients=data_clients, num_clusters=8,
+                  participation=data_clients, local_epochs=4, batch_size=10,
+                  lr=0.05, straggler_rate=0.1, num_enrolled=D,
+                  participants_per_round=K)
+    data_dev = Simulator(LOGREG_SYN, data, fl).data_dev
+    out = {}
+    for depth in PIPELINE_DEPTHS:
+        se = SampledEngine(LOGREG_SYN, data_dev, fl, protocols.get("fedavg"),
+                           pipeline_depth=depth)
+        se.init_store(se.init_params(0), tier=tier)
+        key = jax.random.PRNGKey(0)
+        out[depth] = wallclock(lambda: se.run_rounds(key, rounds),
+                               warmup=1, iters=iters) / rounds
+    return out
 
 
 def run(quick: bool = True, n: int | None = None, verbose: bool = False):
@@ -195,6 +237,30 @@ def run(quick: bool = True, n: int | None = None, verbose: bool = False):
                 print(f"# {tag}: window={window_us:.0f}us "
                       f"store={store_us:.0f}us ({time.time() - t0:.1f}s)",
                       file=sys.stderr)
+    for tier_name, tier, D in PIPELINE_TIERS:
+        t0 = time.time()
+        per_depth = sweep_pipeline(tier, D, SAMPLED_K)
+        serial_us = per_depth[PIPELINE_DEPTHS[0]]
+        for depth, us in per_depth.items():
+            tag = (f"scale/pipeline/{tier_name}/D{D}/K{SAMPLED_K}/"
+                   f"depth{depth}")
+            rows.append((f"{tag}/round_us", us,
+                         "full SampledEngine round (train+mix+store), "
+                         f"{tier} tier"))
+            if depth > 1:
+                rows.append((f"{tag}/speedup_vs_serial",
+                             serial_us / max(us, 1e-9),
+                             "serial/pipelined round wall-clock ratio"))
+                rows.append((f"{tag}/hidden_pct",
+                             100.0 * max(serial_us - us, 0.0)
+                             / max(serial_us, 1e-9),
+                             "% of the serial round hidden behind "
+                             "compute by the pipeline"))
+        if verbose:
+            depths = " ".join(f"d{d}={us:.0f}us"
+                              for d, us in per_depth.items())
+            print(f"# scale/pipeline/{tier_name}/D{D}: {depths} "
+                  f"({time.time() - t0:.1f}s)", file=sys.stderr)
     return rows
 
 

@@ -202,6 +202,45 @@ def sampled_programs(protocol: str, *, codec: str = "none",
 
 
 # ---------------------------------------------------------------------------
+# store (device-resident fast path) suite
+# ---------------------------------------------------------------------------
+
+STORE_D = 4096       # resident-tier population for the traced store programs
+STORE_K = 64
+
+
+def store_programs(*, D: int = STORE_D, K: int = STORE_K,
+                   width: int | None = None) -> List[Program]:
+    """Trace the ``MemoryStore`` device fast path's window movement
+    (``kernels.ops.gather_rows_dev``/``scatter_rows_dev``): one compiled
+    program each, moving the [K, width] window device<->device against the
+    resident [D, width] state with NO host round-trip (``no-host-transfer``
+    audits this) and the state buffer donated through the scatter
+    (``donation-integrity`` audits the alias). Protocol-independent —
+    every sampled round shares these two programs."""
+    from repro.kernels.ops import _gather_rows_dev, _scatter_rows_dev
+    if width is None:
+        width = 610          # the packed logreg width, as the dense suite
+    flat = _sds((D, width))
+    ids = _sds((K,), jnp.int32)
+    rows = _sds((K, width))
+    base = {"num_peers": K, "sparse_path": False, "census_budget": {},
+            "stateful_codec": False, "wire_model": (),
+            "model_bytes": float(width * 4), "rounds": 1}
+    return [
+        Program(name="store/memory/dev/none/gather",
+                jaxpr=jax.make_jaxpr(_gather_rows_dev)(flat, ids),
+                engine="store", protocol="memory", mix_path="dev",
+                codec="none", kind="gather", meta=dict(base)),
+        Program(name="store/memory/dev/none/scatter",
+                jaxpr=jax.make_jaxpr(_scatter_rows_dev)(flat, ids, rows),
+                engine="store", protocol="memory", mix_path="dev",
+                codec="none", kind="scatter",
+                meta=dict(base, donate_intent=(0,))),
+    ]
+
+
+# ---------------------------------------------------------------------------
 # mesh (production shard_map) suite
 # ---------------------------------------------------------------------------
 
@@ -344,4 +383,8 @@ def build_suite(protocol_names=None, *, engines=("dense", "mesh", "sampled"),
                 for mp in dense_paths:
                     out.extend(sampled_programs(name, codec=codec,
                                                 mix_path=mp))
+    if "sampled" in engines:
+        # the device-resident store fast path rides the sampled suite:
+        # ONE gather + ONE scatter program, shared by every protocol
+        out.extend(store_programs())
     return out

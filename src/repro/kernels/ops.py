@@ -134,6 +134,68 @@ def gather_rows(flat: jnp.ndarray, ids) -> jnp.ndarray:
     return jnp.take(flat, ids, axis=0)
 
 
+def _gather_rows_dev(flat, ids):
+    return jnp.take(flat, ids, axis=0)
+
+
+def _scatter_rows_dev(flat, ids, rows):
+    return flat.at[ids].set(rows.astype(flat.dtype))
+
+
+#: jitted device programs behind the resident-store fast path. The scatter
+#: donates the [D, sum(sizes)] state buffer — the store replaces its handle
+#: with the output, so the old buffer is dead the moment the write lands —
+#: except on XLA:CPU, which cannot alias donated buffers and would warn.
+_gather_rows_jit = jax.jit(_gather_rows_dev)
+_scatter_rows_jit = jax.jit(_scatter_rows_dev, donate_argnums=(0,))
+_scatter_rows_jit_nodonate = jax.jit(_scatter_rows_dev)
+
+
+def gather_rows_dev(flat: jnp.ndarray, ids) -> jnp.ndarray:
+    """``gather_rows`` as ONE compiled device program: the accelerator-
+    resident store fast path. ``flat`` stays wherever it lives (device HBM,
+    a mesh sharding) and the [K, sum(sizes)] window is produced with no
+    host round-trip — the traced program joins the contracts baseline and
+    the ``no-host-transfer`` audit."""
+    if getattr(flat, "ndim", 0) != 2:
+        raise ValueError(
+            f"gather_rows_dev: expected a packed [D, sum(sizes)] buffer, "
+            f"got shape {getattr(flat, 'shape', ())}")
+    ids = jnp.asarray(ids)
+    if ids.ndim != 1:
+        raise ValueError(
+            f"gather_rows_dev: ids must be a 1-D [K] index vector, got "
+            f"shape {ids.shape}")
+    return _gather_rows_jit(flat, ids)
+
+
+def scatter_rows_dev(flat: jnp.ndarray, ids, rows: jnp.ndarray,
+                     *, donate: bool | None = None) -> jnp.ndarray:
+    """``scatter_rows`` as ONE compiled device program with the state
+    buffer DONATED (accelerators): the store's handle swap makes the input
+    buffer dead, so XLA writes the window in place instead of copying
+    [D, sum(sizes)]. ``donate=None`` auto-disables donation on XLA:CPU
+    (which cannot alias and would warn every call)."""
+    if getattr(flat, "ndim", 0) != 2 or getattr(rows, "ndim", 0) != 2:
+        raise ValueError(
+            f"scatter_rows_dev: expected packed 2-D buffers, got state "
+            f"shape {getattr(flat, 'shape', ())} and window shape "
+            f"{getattr(rows, 'shape', ())}")
+    if flat.shape[-1] != rows.shape[-1]:
+        raise ValueError(
+            f"scatter_rows_dev: window width {rows.shape[-1]} does not "
+            f"match the state's packed width {flat.shape[-1]}")
+    ids = jnp.asarray(ids)
+    if ids.ndim != 1 or ids.shape[0] != rows.shape[0]:
+        raise ValueError(
+            f"scatter_rows_dev: ids shape {tuple(ids.shape)} does not "
+            f"index the [{rows.shape[0]}, ...] window")
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    fn = _scatter_rows_jit if donate else _scatter_rows_jit_nodonate
+    return fn(flat, ids, jnp.asarray(rows))
+
+
 def scatter_rows(flat: jnp.ndarray, ids, rows: jnp.ndarray) -> jnp.ndarray:
     """Write a [K, sum(sizes)] window back into a packed [D, sum(sizes)]
     buffer at rows ``ids`` (the inverse seam of ``gather_rows``). ``ids``

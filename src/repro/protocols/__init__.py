@@ -37,7 +37,8 @@ from repro.protocols.spec import (  # noqa: F401
     MatchingSpec, MixingSpec, SegmentSpec, apply_spec_flat, apply_spec_tree,
 )
 from repro.protocols.store import (  # noqa: F401
-    CheckpointStore, ClientStateStore, MemoryStore, make_store,
+    CheckpointStore, ClientStateStore, MemoryStore, PrefetchHandle,
+    make_store,
 )
 from repro.protocols.topology_aware import TopologyAwareFedP2P
 
@@ -53,7 +54,8 @@ __all__ = [
     "participation_names", "active_window_size", "validate_participation",
     "RoundContext", "make_context",
     "DenseEngine", "MeshEngine", "SampledEngine",
-    "ClientStateStore", "MemoryStore", "CheckpointStore", "make_store",
+    "ClientStateStore", "MemoryStore", "CheckpointStore", "PrefetchHandle",
+    "make_store",
     "MixingSpec", "SegmentSpec", "MatchingSpec", "apply_spec_flat",
     "apply_spec_tree",
     "FedAvg", "FedP2P", "DecentralizedGossip", "TopologyAwareFedP2P",

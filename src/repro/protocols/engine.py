@@ -465,12 +465,23 @@ class SampledEngine:
     one global model) a window round is bit-for-bit the resident
     ``DenseEngine`` round at matching selections — pinned by
     tests/test_sampled_engine.py.
+
+    ``pipeline_depth`` turns ``run_rounds`` into a software pipeline: at
+    depth 1 (default) rounds run serially, exactly the historical program;
+    at depth d >= 2 up to d windows are in flight at once — round t+1's
+    selection + store prefetch (stage A) and round t's retire/scatter
+    (stage C) overlap round t's compiled window (stage B). Results are
+    bit-for-bit identical to serial at every depth: id overlaps between
+    in-flight rounds are detected on the host id vectors and only the
+    conflicting rows are patched from the in-flight outputs (see
+    ``_acquire_window``). tests/test_pipeline.py pins this under forced
+    collisions.
     """
 
     def __init__(self, net: PaperNetConfig, data_dev: Dict, fl: FLConfig,
                  proto: Protocol, topology: Optional[Topology] = None, *,
                  mix_use_pallas: Optional[bool] = None, codec=None,
-                 mix_path: Optional[str] = None):
+                 mix_path: Optional[str] = None, pipeline_depth: int = 1):
         from repro.protocols.base import (
             get_participation, validate_participation)
         self.net, self.fl, self.proto = net, fl, proto
@@ -502,8 +513,20 @@ class SampledEngine:
         #: [, codec_state]) -> (flat_mixed, mean_loss[, codec_state]) —
         #: every operand is [K, sum(sizes)] or smaller; D never enters
         self.window_fn = jax.jit(self._window_round, donate_argnums=donate)
+        #: max windows in flight in ``run_rounds``: 1 = serial (the
+        #: historical round-by-round loop, bit-for-bit), d >= 2 pipelines
+        #: prefetch/compute/retire across up to d rounds
+        self.pipeline_depth = self._check_depth(pipeline_depth)
         self.store = None
         self._spec = None
+
+    @staticmethod
+    def _check_depth(depth) -> int:
+        depth = int(depth)
+        if depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {depth}")
+        return depth
 
     #: donation target of ``window_fn``: the gathered window (invar 0) is a
     #: fresh per-round buffer the store never reads again
@@ -607,34 +630,168 @@ class SampledEngine:
             flat_mixed, loss, res = self.window_fn(
                 flat_win, active_ids, k_tr, k_str, k_mix,
                 jnp.asarray(round_index, jnp.int32), res)
-            self.store.scatter_residual(ids_np, np.asarray(res))
+            # the store converts ONCE at its seam (np for the cold tier,
+            # zero-copy for device tiers) — no np.asarray here
+            self.store.scatter_residual(ids_np, res)
         else:
             flat_mixed, loss = self.window_fn(
                 flat_win, active_ids, k_tr, k_str, k_mix,
                 jnp.asarray(round_index, jnp.int32))
-        self.store.scatter(ids_np, np.asarray(flat_mixed))
+        self.store.scatter(ids_np, flat_mixed)
         self.store.touch(ids_np, round_index)
         return loss
 
-    def run_rounds(self, key, T: int):
+    # -- the software pipeline (pipeline_depth >= 2) --------------------
+
+    def _issue_round(self, key, t: int):
+        """Stage A: select round t's ids and start the store prefetch.
+        Selection depends only on the key — never on store contents — so
+        it can run arbitrarily far ahead of the scatters. The still-
+        computing DEVICE id vector goes straight to ``prefetch``: tiers
+        with a fetch thread materialize it there, so the O(D) selection
+        (the only population-sized compute of a round) never stalls this
+        loop; ``ids_np`` is filled in at acquire time, when the selection
+        has long finished."""
+        k_sel, k_tr, k_str, k_mix = jax.random.split(
+            jax.random.fold_in(key, t), 4)
+        active_ids = self.select_fn(k_sel)
+        return {
+            "t": t, "active_ids": active_ids, "ids_np": None,
+            "keys": (k_tr, k_str, k_mix),
+            "win": self.store.prefetch(active_ids),
+            "res": (self.store.prefetch_residual(active_ids)
+                    if self._codec_stateful else None),
+        }
+
+    @staticmethod
+    def _patch_rows(win, ids_np, sources, field):
+        """Overlay rows of ``win`` whose ids collide with in-flight rounds:
+        ``sources`` are older rounds (round order) whose scatters the
+        prefetch behind ``win`` may not have observed — their outputs are
+        the rows a serial gather WOULD have returned. Oldest first, so the
+        newest writer of an id wins, exactly like serial scatter order.
+        The ``.astype(win.dtype)`` mirrors the store's scatter-side cast,
+        keeping patched rows bit-identical to a store round-trip."""
+        for p in sources:
+            src = p[field]
+            if src is None:
+                continue
+            pos = {int(c): j for j, c in enumerate(p["ids_np"])}
+            hit_i = [i for i, c in enumerate(ids_np) if int(c) in pos]
+            if not hit_i:
+                continue
+            hit_j = [pos[int(ids_np[i])] for i in hit_i]
+            win = win.at[jnp.asarray(np.array(hit_i, np.int64))].set(
+                jnp.take(src, jnp.asarray(np.array(hit_j, np.int64)),
+                         axis=0).astype(win.dtype))
+        return win
+
+    def _acquire_window(self, cur, shadow, pending):
+        """Finish stage A for round ``cur``: wait the prefetch, then make
+        the window serially-consistent. Two kinds of rounds may own rows
+        the prefetch missed: ``pending`` rounds (dispatched, not yet
+        scattered) and ``shadow`` rounds (scattered AFTER this prefetch
+        was issued — the background fetch may have read pre-scatter
+        rows). Both patch from their in-flight outputs; patching a row
+        the prefetch DID see post-scatter rewrites it with the same bits,
+        so the patch is idempotent and the read race is benign."""
+        cur["ids_np"] = ids_np = np.asarray(cur["active_ids"])
+        sources = shadow + pending
+        flat_win = self._patch_rows(cur["win"].wait(), ids_np, sources,
+                                    "out_flat")
+        res = None
+        if self._codec_stateful:
+            res = self._patch_rows(cur["res"].wait(), ids_np, sources,
+                                   "out_res")
+        return flat_win, res
+
+    def _retire_round(self, p):
+        """Stage C: scatter round p's mixed rows (+ residual) back and
+        advance staleness. The store seam does the one host conversion;
+        ``copy_to_host_async`` was already started at dispatch, so the
+        device->host sync here usually finds the bytes waiting."""
+        if p["out_res"] is not None:
+            self.store.scatter_residual(p["ids_np"], p["out_res"])
+        self.store.scatter(p["ids_np"], p["out_flat"])
+        self.store.touch(p["ids_np"], p["t"])
+
+    def _run_rounds_pipelined(self, key, T: int, depth: int):
+        """T rounds with up to ``depth`` windows in flight. Per loop
+        iteration: acquire round t's prefetched window (patching id
+        conflicts), dispatch its compiled window_fn (stage B, async),
+        issue round t+1's select+prefetch (stage A), then retire the
+        oldest rounds (stage C) until at most depth-1 stay in flight.
+        Retires run in round order, so ``last_round`` and the store match
+        serial exactly."""
+        host_retire = self.store.resident_flat() is None
+        pending, shadow, losses = [], [], [None] * T
+        nxt = self._issue_round(key, 0) if T > 0 else None
+        for t in range(T):
+            cur = nxt
+            flat_win, res = self._acquire_window(cur, shadow, pending)
+            # every prefetch issued from here on sees the shadow rounds'
+            # scatters (they completed before this point) — drop them
+            shadow.clear()
+            k_tr, k_str, k_mix = cur["keys"]
+            if self._codec_stateful:
+                out_flat, loss, out_res = self.window_fn(
+                    flat_win, cur["active_ids"], k_tr, k_str, k_mix,
+                    jnp.asarray(t, jnp.int32), res)
+            else:
+                out_res = None
+                out_flat, loss = self.window_fn(
+                    flat_win, cur["active_ids"], k_tr, k_str, k_mix,
+                    jnp.asarray(t, jnp.int32))
+            if host_retire:
+                # start the device->host copy NOW so stage C's np
+                # conversion doesn't block on the transfer later
+                for buf in (out_flat, out_res):
+                    if buf is not None and hasattr(buf,
+                                                   "copy_to_host_async"):
+                        buf.copy_to_host_async()
+            cur.update(out_flat=out_flat, out_res=out_res)
+            losses[t] = loss
+            pending.append(cur)
+            nxt = self._issue_round(key, t + 1) if t + 1 < T else None
+            while len(pending) > depth - 1:
+                p = pending.pop(0)
+                self._retire_round(p)
+                shadow.append(p)
+        for p in pending:
+            self._retire_round(p)
+        return losses
+
+    def run_rounds(self, key, T: int, *, pipeline_depth: Optional[int] = None):
         """Run T sampled rounds against the store (a host loop — the store
         is host-owned state; each round's WINDOW is one compiled program).
-        Returns metrics with the [T] per-round mean train losses."""
-        losses = []
-        for t in range(int(T)):
-            losses.append(self.round(jax.random.fold_in(key, t),
-                                     round_index=t))
+        ``pipeline_depth`` (default: the engine's) overlaps select/prefetch
+        and retire/scatter with the compiled window at depth >= 2,
+        bit-for-bit identical to the depth-1 serial loop. Returns metrics
+        with the [T] per-round mean train losses."""
+        if self.store is None:
+            raise ValueError("SampledEngine.run_rounds: call "
+                             "init_store(params) first")
+        depth = self._check_depth(self.pipeline_depth if pipeline_depth
+                                  is None else pipeline_depth)
+        T = int(T)
+        if depth == 1:
+            losses = [self.round(jax.random.fold_in(key, t), round_index=t)
+                      for t in range(T)]
+        else:
+            losses = self._run_rounds_pipelined(key, T, depth)
         return {"train_loss": np.asarray(jax.device_get(losses))}
 
     def global_params(self):
         """Consensus readout: the mean over ALL enrolled rows, unpacked to
-        the model pytree. On the resident tier this is exactly the dense
-        engine's per-leaf-dtype ``mean_packed`` collapse; the cold tier
-        uses the store's analytic overlay+base mean."""
+        the model pytree. On resident tiers (``resident_flat()`` returns
+        the live buffer) this is exactly the dense engine's per-leaf-dtype
+        ``mean_packed`` collapse; tiers without a resident buffer fall
+        back to the store's ``consensus()`` contract."""
         if self.store is None:
             raise ValueError("SampledEngine.global_params: no store")
-        if hasattr(self.store, "flat"):
-            row = kernel_ops.mean_packed(self.store.flat, self._spec)
+        flat = self.store.resident_flat()
+        if flat is not None:
+            row = kernel_ops.mean_packed(flat, self._spec)
         else:
             row = jnp.asarray(self.store.consensus())
         return kernel_ops.unpack_tree(row, self._spec)

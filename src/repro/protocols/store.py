@@ -35,7 +35,9 @@ async/debiasing extensions need lives with the state, not the engine.
 from __future__ import annotations
 
 import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Optional
+
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +49,37 @@ from repro.kernels import ops as kernel_ops
 #: footprint (bytes of [D, sum(sizes)] at f32) above which ``make_store``
 #: refuses to materialize a resident buffer and drops to the cold tier
 MEMORY_TIER_MAX_BYTES = 2 ** 31
+
+
+class PrefetchHandle:
+    """An in-flight window read issued by ``ClientStateStore.prefetch``.
+    ``wait()`` blocks until the [K, width] rows are available and returns
+    them; calling it twice returns the same rows."""
+
+    def wait(self) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+class _ReadyPrefetch(PrefetchHandle):
+    """Eager tier: the gather was already dispatched (device work is
+    async under JAX's dispatch model, so 'eager' still overlaps)."""
+
+    def __init__(self, rows):
+        self._rows = rows
+
+    def wait(self):
+        return self._rows
+
+
+class _ThreadPrefetch(PrefetchHandle):
+    """Cold tier: the gather runs on a background fetch thread so
+    ``load_leaves`` partial-row file reads overlap the compiled window."""
+
+    def __init__(self, future):
+        self._future = future
+
+    def wait(self):
+        return self._future.result()
 
 
 class ClientStateStore:
@@ -71,6 +104,33 @@ class ClientStateStore:
 
     def scatter(self, ids, rows) -> None:
         """Write the mixed [K, width] window back at the active ids."""
+        raise NotImplementedError
+
+    # -- async prefetch (the pipelined engine's stage-A seam) -----------
+    def prefetch(self, ids) -> PrefetchHandle:
+        """Start fetching the [K, width] window for ``ids``; returns a
+        handle whose ``wait()`` yields the rows. The base implementation
+        dispatches the gather eagerly — correct for every tier, and
+        already overlapping for device-backed tiers (JAX async dispatch).
+        Tiers whose gather blocks the host (file reads) override this
+        with a background thread."""
+        return _ReadyPrefetch(self.gather(ids))
+
+    def prefetch_residual(self, ids) -> PrefetchHandle:
+        """``prefetch`` for the codec residual tier."""
+        return _ReadyPrefetch(self.gather_residual(ids))
+
+    # -- readout contract -----------------------------------------------
+    def resident_flat(self) -> Optional[jnp.ndarray]:
+        """The live [D, width] buffer if this tier keeps one resident,
+        else ``None`` — callers dispatch on this instead of duck-typing
+        (``global_params`` reads rows directly when a buffer exists and
+        falls back to ``consensus()`` otherwise)."""
+        return None
+
+    def consensus(self) -> np.ndarray:
+        """[width] mean over all enrolled rows (the global-model
+        readout). Every tier must provide this, resident or not."""
         raise NotImplementedError
 
     # -- per-client codec residuals ------------------------------------
@@ -123,22 +183,45 @@ class MemoryStore(ClientStateStore):
                   else mesh_info.dp_axes[0])
             self._sharding = NamedSharding(mesh_info.mesh, P(ax, None))
             flat = jax.device_put(flat, self._sharding)
+        flat = jnp.asarray(flat)
         self._flat = flat
         self._residual = (jnp.zeros(flat.shape, jnp.float32)
                           if residual else None)
+        try:
+            platforms = {d.platform for d in flat.devices()}
+        except Exception:
+            platforms = {"cpu"}
+        #: accelerator-resident buffers take the jitted
+        #: ``gather_rows_dev``/``scatter_rows_dev`` fast path: windows
+        #: move device↔device with the state buffer donated through the
+        #: scatter — no host round-trip at all
+        self._device_resident = platforms and "cpu" not in platforms
 
     @property
     def flat(self) -> jnp.ndarray:
         """The live [D, width] buffer (resident tier only)."""
         return self._flat
 
+    def resident_flat(self) -> jnp.ndarray:
+        return self._flat
+
     def gather(self, ids) -> jnp.ndarray:
-        return kernel_ops.gather_rows(self._flat,
-                                      jnp.asarray(self._check_ids(ids)))
+        ids = jnp.asarray(self._check_ids(ids))
+        if self._device_resident:
+            return kernel_ops.gather_rows_dev(self._flat, ids)
+        return kernel_ops.gather_rows(self._flat, ids)
 
     def scatter(self, ids, rows) -> None:
-        self._flat = kernel_ops.scatter_rows(
-            self._flat, jnp.asarray(self._check_ids(ids)), jnp.asarray(rows))
+        # ``rows`` arrives as whatever the engine produced (usually the
+        # still-device-resident window output); jnp.asarray is zero-copy
+        # for device arrays — the ONE conversion happens here, at the seam
+        ids = jnp.asarray(self._check_ids(ids))
+        if self._device_resident:
+            self._flat = kernel_ops.scatter_rows_dev(
+                self._flat, ids, jnp.asarray(rows))
+        else:
+            self._flat = kernel_ops.scatter_rows(self._flat, ids,
+                                                 jnp.asarray(rows))
 
     def gather_residual(self, ids) -> jnp.ndarray:
         if self._residual is None:
@@ -191,6 +274,43 @@ class CheckpointStore(ClientStateStore):
         #: touched rows only: {client id -> [width] np row}
         self._overlay: Dict[int, np.ndarray] = {}
         self._residual_overlay: Dict[int, np.ndarray] = {}
+        #: lazily-started background fetch thread for prefetch(): the
+        #: ``load_leaves`` partial-row file reads block the host, so they
+        #: run off-thread to overlap the compiled window. One worker —
+        #: prefetches are issued one round ahead and must stay ordered.
+        self._executor: Optional[ThreadPoolExecutor] = None
+
+    def _fetch_pool(self) -> ThreadPoolExecutor:
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="store-prefetch")
+        return self._executor
+
+    def prefetch(self, ids) -> PrefetchHandle:
+        """Background-thread gather: safe against concurrent ``scatter``
+        because ``gather`` only does per-id ``dict.get``/membership reads
+        (never iterates the overlay) and ``scatter`` replaces whole rows
+        atomically under the GIL. A racing read of a conflicting id may
+        return the pre-scatter row — the pipelined engine detects id
+        overlaps on the host and patches those rows before use.
+
+        ``ids`` may be a still-computing DEVICE array (e.g. the jitted
+        selection's output): the host materialization then happens on the
+        fetch thread too, so an O(D) selection never blocks the caller —
+        the whole id->rows chain overlaps the compiled window."""
+        if isinstance(ids, jax.Array):
+            return _ThreadPrefetch(self._fetch_pool().submit(
+                lambda: self.gather(np.asarray(ids))))
+        ids = self._check_ids(ids)
+        return _ThreadPrefetch(self._fetch_pool().submit(self.gather, ids))
+
+    def prefetch_residual(self, ids) -> PrefetchHandle:
+        if isinstance(ids, jax.Array):
+            return _ThreadPrefetch(self._fetch_pool().submit(
+                lambda: self.gather_residual(np.asarray(ids))))
+        ids = self._check_ids(ids)
+        return _ThreadPrefetch(
+            self._fetch_pool().submit(self.gather_residual, ids))
 
     @property
     def num_touched(self) -> int:
