@@ -1,0 +1,125 @@
+"""Chaos soak: bounded degradation under an injected fault plan.
+
+Runs the sampled-participation engine twice per protocol — once clean,
+once under a deterministic ``repro.faults`` plan (10% dropout, 10%
+corrupted uploads across all three modes, transient store-read errors,
+and a mid-run prefetch-worker kill) on the CHECKPOINT store tier at
+pipeline depth 2 — and reports the accuracy gap plus the per-run fault
+counters. Two invariants are enforced, not just reported:
+
+  * the store never absorbs a corrupted row — after the faulted run
+    every enrolled row must be finite and magnitude-bounded (a single
+    absorbed ``bitflip`` row sits around 1e38 and would trip this);
+  * degradation is bounded — consensus accuracy under the plan stays
+    within ``MAX_ACC_GAP`` of the fault-free run.
+
+A clean run under ``faults=None`` shares the exact pre-fault programs
+(the contracts baseline pins that), so the gap isolates the injected
+failures themselves.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro import faults as fault_lib
+from repro.config import FLConfig
+from repro.configs.paper_models import LOGREG_SYN
+from repro.core.simulator import Simulator
+from repro.data.federated import pack_clients
+from repro.data.synthetic import syncov
+from repro.protocols import get
+from repro.protocols.engine import DenseEngine, SampledEngine
+
+#: hard bound on the clean-vs-faulted consensus accuracy gap at the
+#: soak's 10% fault rates — the acceptance bar: fault tolerance must
+#: keep degradation within 2% of the fault-free run
+MAX_ACC_GAP = 0.02
+#: any |row| beyond this after the soak means a corrupted upload got
+#: absorbed (healthy logreg rows here sit well under 1e2)
+MAX_ROW_ABS = 1e4
+
+
+def _soak_once(data_dev, fl, proto, plan, *, rounds, seed, depth, tier):
+    se = SampledEngine(LOGREG_SYN, data_dev, fl, proto,
+                       pipeline_depth=depth, faults=plan)
+    se.init_store(se.init_params(seed), tier=tier)
+    metrics = se.run_rounds(jax.random.PRNGKey(seed + 1), rounds)
+    return se, metrics
+
+
+def _store_rows(se):
+    """Every enrolled row as one host array, on either tier."""
+    flat = se.store.resident_flat()
+    if flat is not None:
+        return np.asarray(flat)
+    ids = np.arange(se.num_enrolled, dtype=np.int32)
+    return np.asarray(se.store.gather(ids))
+
+
+def run(quick: bool = True):
+    D, K = (24, 8) if quick else (96, 24)
+    rounds = 10 if quick else 30
+    fl = FLConfig(num_clients=D, num_clusters=2, devices_per_cluster=8,
+                  participation=D, local_epochs=3, batch_size=10, lr=0.05,
+                  straggler_rate=0.0, num_enrolled=D,
+                  participants_per_round=K, store_read_retries=3)
+    xs, ys = syncov(num_clients=D, seed=0)
+    data_dev = Simulator(LOGREG_SYN, pack_clients(xs, ys, 10, seed=0),
+                         fl).data_dev
+    plan = fault_lib.make_plan(
+        D, rounds, seed=7, drop_rate=0.1, corrupt_rate=0.1,
+        read_error_rate=0.5, kill_prefetch_rounds=(rounds // 2,))
+    rows = []
+    algos = ("fedavg",) if quick else ("fedavg", "gossip")
+    for algo in algos:
+        proto = get(algo)
+        evaluate = DenseEngine(LOGREG_SYN, data_dev, fl, proto).evaluate
+        accs = {}
+        for label, p in (("clean", None), ("faulted", plan)):
+            se, metrics = _soak_once(data_dev, fl, proto, p, rounds=rounds,
+                                     seed=0, depth=2, tier="checkpoint")
+            accs[label] = float(evaluate(se.global_params())[0])
+            if p is None:
+                continue
+            flat = _store_rows(se)
+            if not np.all(np.isfinite(flat)):
+                raise RuntimeError(
+                    f"chaos_soak[{algo}]: store absorbed a non-finite row")
+            worst = float(np.max(np.abs(flat)))
+            if worst > MAX_ROW_ABS:
+                raise RuntimeError(
+                    f"chaos_soak[{algo}]: store row magnitude {worst:.3g} "
+                    f"exceeds {MAX_ROW_ABS:.0e} — a corrupted upload was "
+                    f"absorbed")
+            counters = {name: int(metrics[name].sum())
+                        for name in ("dropped", "rejected_rows", "retries",
+                                     "prefetch_fallbacks")}
+            rows.append((f"chaos/{algo}/store_max_abs", worst,
+                         f"rounds={rounds};tier=checkpoint;depth=2"))
+            for name, total in counters.items():
+                rows.append((f"chaos/{algo}/{name}", float(total),
+                             f"sum over {rounds} rounds"))
+        gap = accs["clean"] - accs["faulted"]
+        if gap > MAX_ACC_GAP:
+            raise RuntimeError(
+                f"chaos_soak[{algo}]: accuracy gap {gap:.4f} exceeds "
+                f"{MAX_ACC_GAP} (clean={accs['clean']:.4f}, "
+                f"faulted={accs['faulted']:.4f})")
+        rows.append((f"chaos/{algo}/acc_clean", accs["clean"], ""))
+        rows.append((f"chaos/{algo}/acc_faulted", accs["faulted"],
+                     "drop=0.1;corrupt=0.1;read_err=0.5;1 worker kill"))
+        rows.append((f"chaos/{algo}/acc_gap", gap,
+                     f"bound={MAX_ACC_GAP}"))
+    return rows
+
+
+def main():
+    from benchmarks.common import print_rows
+    rows = run()
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

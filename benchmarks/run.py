@@ -23,7 +23,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (accuracy, analysis_audit, comm_time,
+    from benchmarks import (accuracy, analysis_audit, chaos_soak, comm_time,
                             compression_sweep, kernel_bench, lq_sweep,
                             roofline, scale_sweep, stragglers, theory_bound,
                             topology_gain)
@@ -42,6 +42,8 @@ def main(argv=None) -> None:
         "roofline": lambda: roofline.run(quick=quick),      # deliverable (g)
         # jaxpr auditor summary (programs/rules/errors) from ANALYSIS.json
         "analysis": lambda: analysis_audit.run(quick=quick),
+        # fault-injection soak: bounded degradation + store stays clean
+        "faults": lambda: chaos_soak.run(quick=quick),
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(modules):

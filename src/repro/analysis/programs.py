@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro import protocols
 from repro.config import FLConfig
 from repro.configs.paper_models import LOGREG_SYN
+from repro.faults import FaultPlan, FaultSpec
 from repro.protocols.context import make_context
 from repro.protocols.engine import DenseEngine, MeshEngine, SampledEngine
 
@@ -355,6 +356,76 @@ def mesh_programs(protocol: str, *, codec: str = "none", rounds: int = 3,
     return out
 
 
+#: the literal plan every fault-guarded audit program closes over: tiny,
+#: explicit, and exercising all three corrupt modes plus a dropout — the
+#: traced structure is what the contracts baseline pins, not the values
+_FAULT_PLAN = FaultPlan(specs=(
+    FaultSpec(0, drop=(1,), corrupt=((2, "nan"), (3, "bitflip"))),
+    FaultSpec(2, corrupt=((0, "inf"),)),
+))
+
+
+def dense_fault_programs(protocol: str, *, mix_path: str = "auto",
+                         rounds: int = 3, P: int = DENSE_P) -> List[Program]:
+    """Trace the FAULT-GUARDED DenseEngine run program: the scan body with
+    the plan's per-round drop/flag/mode xs, the corrupt wire, the
+    receive-side exclusion, and the scatter-back guard. A separate program
+    from the fault-free run — the baseline diff proving the zero-cost-when-
+    disabled contract is exactly 'these programs appear, the others don't
+    change'."""
+    proto = protocols.get(protocol)
+    fl = _dense_fl(P)
+    resolved = _resolved_mix_path(proto, fl, mix_path)
+    engine = DenseEngine(LOGREG_SYN, _dense_data(P), fl, proto,
+                         mix_path=mix_path, faults=_FAULT_PLAN)
+    flat0, spec = engine._pack_params(engine.init_params(0))
+    run = engine._build_run(spec, rounds, 1)
+    jaxpr = jax.make_jaxpr(run)(flat0, jax.random.PRNGKey(0))
+    meta = {"num_peers": P, "sparse_path": resolved == "sparse",
+            "census_budget": {}, "stateful_codec": False,
+            "wire_model": (), "rounds": rounds, "faulted": True,
+            "model_bytes": float(flat0.size * flat0.dtype.itemsize),
+            "donate_intent": tuple(engine._donate_argnums)}
+    return [Program(
+        name=f"dense/{protocol}/{resolved}/none/faulty-run{rounds}",
+        jaxpr=jaxpr, engine="dense", protocol=protocol,
+        mix_path=resolved, codec="none", kind="run", meta=meta)]
+
+
+def sampled_fault_programs(protocol: str, *, mix_path: str = "auto",
+                           K: int = DENSE_P, num_enrolled: int = SAMPLED_D
+                           ) -> List[Program]:
+    """Trace the FAULT-GUARDED sampled window round (``_window_round_
+    faulted``): per-slot drop/flag/mode operands, the corrupt wire, and
+    the guard returning the rejected mask. Shares the fault-free window's
+    residency discipline — D never enters the traced program."""
+    proto = protocols.get(protocol)
+    fl = FLConfig(num_clients=K, num_clusters=2,
+                  devices_per_cluster=K // 2, participation=K,
+                  local_epochs=1, batch_size=4, lr=0.05,
+                  straggler_rate=0.1, num_enrolled=num_enrolled,
+                  participants_per_round=K)
+    resolved = _resolved_mix_path(proto, fl, mix_path)
+    engine = SampledEngine(LOGREG_SYN, _dense_data(K), fl, proto,
+                           mix_path=mix_path, faults=_FAULT_PLAN)
+    engine.init_store(engine.init_params(0))
+    width = engine.store.width
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    jaxpr = jax.make_jaxpr(engine._window_round_faulted)(
+        _sds((K, width)), _sds((K,), jnp.int32), key, key, key,
+        _sds((K,)), _sds((K,)), _sds((K,), jnp.int32), _sds((), jnp.int32))
+    meta = {"num_peers": K, "sparse_path": resolved == "sparse",
+            "census_budget": {}, "stateful_codec": False,
+            "wire_model": (), "model_bytes": float(width * 4),
+            "sampled_window": True, "num_enrolled": num_enrolled,
+            "window": K, "rounds": 1, "faulted": True,
+            "donate_intent": tuple(engine._donate_argnums)}
+    return [Program(
+        name=f"sampled/{protocol}/{resolved}/none/faulty-round",
+        jaxpr=jaxpr, engine="sampled", protocol=protocol,
+        mix_path=resolved, codec="none", kind="round", meta=meta)]
+
+
 # ---------------------------------------------------------------------------
 # suite composition
 # ---------------------------------------------------------------------------
@@ -383,6 +454,17 @@ def build_suite(protocol_names=None, *, engines=("dense", "mesh", "sampled"),
                 for mp in dense_paths:
                     out.extend(sampled_programs(name, codec=codec,
                                                 mix_path=mp))
+        # fault-guarded variants ride the uncompressed suite only: one
+        # dense faulty-run and one sampled faulty-round per lowering —
+        # their presence (and the fault-free programs' bit-identity) is
+        # the baseline's zero-cost-when-disabled evidence
+        if "dense" in engines and "none" in codecs:
+            for mp in dense_paths:
+                out.extend(dense_fault_programs(name, mix_path=mp,
+                                                rounds=rounds))
+        if "sampled" in engines and "none" in codecs:
+            for mp in dense_paths:
+                out.extend(sampled_fault_programs(name, mix_path=mp))
     if "sampled" in engines:
         # the device-resident store fast path rides the sampled suite:
         # ONE gather + ONE scatter program, shared by every protocol

@@ -1,1 +1,4 @@
-from repro.checkpoint.io import latest_step, load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    CheckpointCorruptionError, latest_step, load_checkpoint, load_leaves,
+    save_checkpoint,
+)

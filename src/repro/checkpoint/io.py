@@ -16,6 +16,16 @@ import jax
 import numpy as np
 
 
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint file is truncated or structurally corrupt.
+
+    Raised instead of the raw ``zipfile``/``struct`` errors so callers can
+    tell a PERMANENT failure (bad bytes on disk — retrying cannot help;
+    ``CheckpointStore`` deliberately excludes this from its read-retry
+    loop) from a transient one, and so the message names the offending
+    path and row range instead of an opaque zip offset."""
+
+
 def _key_str(path) -> str:
     parts = []
     for p in path:
@@ -97,10 +107,20 @@ def load_leaves(path: str, indices: Sequence[int]) -> Tuple[List[np.ndarray], Di
     if idx.ndim != 1:
         raise ValueError(f"load_leaves: indices must be 1-D, got shape "
                          f"{idx.shape}")
-    with zipfile.ZipFile(path) as zf:
-        with zf.open("__meta__.npy") as fh:
-            meta = json.loads(str(np.lib.format.read_array(
-                fh, allow_pickle=False)))
+    try:
+        zf_ctx = zipfile.ZipFile(path)
+    except zipfile.BadZipFile as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint {path!r} is corrupt or truncated: {e}") from e
+    with zf_ctx as zf:
+        try:
+            with zf.open("__meta__.npy") as fh:
+                meta = json.loads(str(np.lib.format.read_array(
+                    fh, allow_pickle=False)))
+        except (KeyError, zipfile.BadZipFile, ValueError) as e:
+            raise CheckpointCorruptionError(
+                f"checkpoint {path!r} is corrupt: cannot read its "
+                f"__meta__ record ({e})") from e
         dtypes = meta.get("dtypes", [None] * len(meta["names"]))
         leaves: List[np.ndarray] = []
         for i, dt in enumerate(dtypes):
@@ -143,7 +163,15 @@ def load_leaves(path: str, indices: Sequence[int]) -> Tuple[List[np.ndarray], Di
                 flat = out.reshape(idx.size, -1)
                 for j, r in enumerate(idx):
                     fh.seek(data_start + int(r) * row_bytes)
-                    flat[j] = np.frombuffer(fh.read(row_bytes), dtype)
+                    buf = fh.read(row_bytes)
+                    if len(buf) != row_bytes:
+                        raise CheckpointCorruptionError(
+                            f"checkpoint {path!r} is truncated: leaf {i} "
+                            f"row {int(r)} (requested rows "
+                            f"{int(idx.min())}..{int(idx.max())} of "
+                            f"{shape[0]}) yielded {len(buf)} of "
+                            f"{row_bytes} bytes")
+                    flat[j] = np.frombuffer(buf, dtype)
                 leaves.append(_restore_dtype(out, dt))
     return leaves, meta
 

@@ -251,6 +251,19 @@ class FLConfig:
     # Pareto strategy's per-round Bernoulli availability cap; uniform
     # ignores it). Must lie in (0, 1].
     participation_rate: float = 1.0
+    # --- fault tolerance (repro.faults / protocols.store) ---
+    # checkpoint-tier read resilience: a failed load_leaves / base-row
+    # read is retried this many times before the error propagates
+    # (0 = fail fast). Retries only fire on transient OSErrors —
+    # CheckpointCorruptionError is permanent and never retried.
+    store_read_retries: int = 2
+    # base seconds of the exponential backoff between read retries
+    # (retry k sleeps store_read_backoff * 2**k).
+    store_read_backoff: float = 0.05
+    # seconds the pipelined engine waits on a prefetch handle before
+    # abandoning it and falling back to a synchronous gather (counted as
+    # a prefetch_fallback). 0 = wait forever, the pre-fault behavior.
+    prefetch_timeout: float = 0.0
 
     def __post_init__(self):
         if self.num_enrolled < 0:
@@ -273,6 +286,18 @@ class FLConfig:
             raise ValueError(
                 f"FLConfig: participation_rate must lie in (0, 1], got "
                 f"{self.participation_rate}")
+        if self.store_read_retries < 0:
+            raise ValueError(
+                f"FLConfig: store_read_retries must be >= 0, got "
+                f"{self.store_read_retries}")
+        if self.store_read_backoff < 0:
+            raise ValueError(
+                f"FLConfig: store_read_backoff must be >= 0, got "
+                f"{self.store_read_backoff}")
+        if self.prefetch_timeout < 0:
+            raise ValueError(
+                f"FLConfig: prefetch_timeout must be >= 0 (0 = wait "
+                f"forever), got {self.prefetch_timeout}")
 
     @property
     def enrolled(self) -> int:

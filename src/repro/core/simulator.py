@@ -47,6 +47,12 @@ class History:
     acc_client_mean: List[float] = field(default_factory=list)
     train_loss: List[float] = field(default_factory=list)
     acc_rounds: List[int] = field(default_factory=list)
+    #: per-round fault counters (``repro.faults``) — populated only when
+    #: the run had an active fault plan, empty otherwise
+    dropped: List[int] = field(default_factory=list)
+    rejected_rows: List[int] = field(default_factory=list)
+    retries: List[int] = field(default_factory=list)
+    prefetch_fallbacks: List[int] = field(default_factory=list)
 
     @property
     def best_acc(self) -> float:
@@ -57,9 +63,14 @@ class Simulator:
     def __init__(self, net: PaperNetConfig, data: FederatedDataset,
                  fl: FLConfig, topology: Optional[Topology] = None, *,
                  mix_use_pallas: Optional[bool] = None,
-                 mix_path: Optional[str] = None):
+                 mix_path: Optional[str] = None, faults=None):
+        from repro import faults as fault_lib
         self.net, self.fl = net, fl
         self.topology = topology
+        #: optional ``repro.faults.FaultPlan`` forwarded to every engine
+        #: (active form; None keeps every run's program bit-for-bit the
+        #: pre-fault build) — faulted runs fill History's fault counters
+        self.faults = fault_lib.active(faults)
         #: forwarded to every DenseEngine (None = auto backend; False forces
         #: the jnp mixing oracle, e.g. to A/B against the kernel on TPU)
         self.mix_use_pallas = mix_use_pallas
@@ -94,8 +105,9 @@ class Simulator:
             codec if codec is not None else self.fl.codec)
         mix_path = mix_path or self.mix_path
         # key on the (frozen, hashable) codec instance, not its name —
-        # Int8Codec(chunk=64) must never reuse a chunk=256 engine
-        cache_key = (proto.name, codec, mix_path)
+        # Int8Codec(chunk=64) must never reuse a chunk=256 engine; the
+        # fault plan is frozen/hashable too
+        cache_key = (proto.name, codec, mix_path, self.faults)
         if cache_key not in self._engines:
             if proto.needs_topology and self.topology is None:
                 self.topology = make_topology(self.fl.num_clients,
@@ -103,7 +115,7 @@ class Simulator:
             self._engines[cache_key] = DenseEngine(
                 self.net, self.data_dev, self.fl, proto, self.topology,
                 mix_use_pallas=self.mix_use_pallas, codec=codec,
-                mix_path=mix_path)
+                mix_path=mix_path, faults=self.faults)
         return self._engines[cache_key]
 
     @property
@@ -133,6 +145,11 @@ class Simulator:
         acc_m = np.asarray(metrics["acc_client_mean"])
         loss = np.asarray(metrics["train_loss"])
         hist = History()
+        for name in ("dropped", "rejected_rows", "retries",
+                     "prefetch_fallbacks"):
+            if name in metrics:
+                getattr(hist, name).extend(
+                    int(v) for v in np.asarray(metrics[name]))
         for t in range(rounds):
             hist.train_loss.append(float(loss[t]))
             if (t + 1) % eval_every == 0 or t == rounds - 1:

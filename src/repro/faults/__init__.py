@@ -1,0 +1,40 @@
+"""repro.faults — deterministic, seed-driven fault injection.
+
+The paper's edge setting is defined by unreliable participants, but until
+this subsystem the only failure the repro could express was a pre-round
+Bernoulli ``survive`` mask. ``repro.faults`` makes every failure mode the
+wireless-FL literature treats as *normal* (arXiv:2006.02499,
+arXiv:1909.11875) injectable and survivable:
+
+* **client dropout mid-round** — the update never arrives (folded into the
+  mixing ``survive`` mask; the client's persistent row keeps its pre-round
+  value and the client is requeued — cold-retry);
+* **corrupted update rows** — NaN / Inf / bit-flip poison on the reported
+  rows; the engines' scatter-back guard rejects them before the persistent
+  store can absorb a non-finite row;
+* **checkpoint-tier read errors** — transient ``load_leaves`` failures the
+  store's retry-with-backoff recovers from;
+* **prefetch delays / worker death** — a stuck or dead
+  ``PrefetchHandle`` makes the engine fall back to a synchronous gather.
+
+Everything is a frozen dataclass derived from one seed: a ``FaultPlan`` is
+a tuple of per-round ``FaultSpec``s (``make_plan`` draws them), so a chaos
+soak replays bit-identically. ``active(plan)`` normalizes the disabled
+forms (``None`` / empty plan) to ``None`` — engines gate every guard on
+that, exactly like ``compression.active``, so a ``faults=None`` engine
+traces the bit-for-bit pre-fault program (pinned by the contracts
+baseline).
+"""
+from repro.faults.inject import (  # noqa: F401
+    FaultInjector, InjectedFault, InjectedReadError, InjectedWorkerDeath,
+    corrupt_flat, corrupt_rows_np, guard_flat,
+)
+from repro.faults.plan import (  # noqa: F401
+    CORRUPT_MODES, FaultPlan, FaultSpec, active, make_plan,
+)
+
+__all__ = [
+    "FaultSpec", "FaultPlan", "make_plan", "active", "CORRUPT_MODES",
+    "FaultInjector", "InjectedFault", "InjectedReadError",
+    "InjectedWorkerDeath", "corrupt_flat", "corrupt_rows_np", "guard_flat",
+]

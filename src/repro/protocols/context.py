@@ -71,6 +71,13 @@ class RoundContext:
     #                               rows on the sampled path (None = resident:
     #                               row i IS client i). Traced — selections
     #                               vary per round.
+    fault_drop: Any = None        # [D] 0/1 injected-dropout mask from the
+    #                               repro.faults harness (already folded into
+    #                               ``survive``; carried separately so
+    #                               protocols/cost models can tell injected
+    #                               dropouts from organic stragglers). None =
+    #                               no fault plan — the pytree keeps its
+    #                               pre-fault structure, like active_ids.
     # --- meta fields (static) ------------------------------------------
     num_clusters: int = 1
     do_global_sync: bool = True
@@ -96,7 +103,7 @@ class RoundContext:
 jax.tree_util.register_dataclass(
     RoundContext,
     data_fields=("key", "round_index", "survive", "counts", "cluster_ids",
-                 "active_ids"),
+                 "active_ids", "fault_drop"),
     meta_fields=("num_clusters", "do_global_sync", "topology", "mesh_info",
                  "codec", "num_enrolled"),
 )
@@ -123,7 +130,7 @@ def make_context(*, key=None, round_index=0, survive=None, counts=None,
                  cluster_ids=None, num_clusters: Optional[int] = None,
                  do_global_sync: bool = True, topology: Optional[Topology] = None,
                  mesh_info=None, codec=None, num_clients: Optional[int] = None,
-                 active_ids=None, num_enrolled: int = 0
+                 active_ids=None, num_enrolled: int = 0, fault_drop=None
                  ) -> RoundContext:
     """Build a RoundContext, defaulting every unspecified field.
 
@@ -163,7 +170,7 @@ def make_context(*, key=None, round_index=0, survive=None, counts=None,
     return RoundContext(
         key=key, round_index=jnp.asarray(round_index, jnp.int32),
         survive=survive, counts=counts, cluster_ids=cluster_ids,
-        active_ids=active_ids,
+        active_ids=active_ids, fault_drop=fault_drop,
         num_clusters=int(num_clusters), do_global_sync=bool(do_global_sync),
         topology=topology, mesh_info=mesh_info, codec=codec,
         num_enrolled=int(num_enrolled))

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compression
+from repro import faults as fault_lib
 from repro.config import FLConfig
 from repro.configs.paper_models import PaperNetConfig
 from repro.core.straggler import straggler_mask
@@ -176,7 +177,7 @@ class DenseEngine:
     def __init__(self, net: PaperNetConfig, data_dev: Dict, fl: FLConfig,
                  proto: Protocol, topology: Optional[Topology] = None, *,
                  mix_use_pallas: Optional[bool] = None, codec=None,
-                 mix_path: Optional[str] = None):
+                 mix_path: Optional[str] = None, faults=None):
         self.net, self.fl, self.proto = net, fl, proto
         self.topology = topology
         self.data_dev = data_dev
@@ -196,6 +197,15 @@ class DenseEngine:
         #: ``round_fn`` take/return a [P, sum(sizes)] f32 residual that
         #: ``run_rounds`` threads through the scan carry.
         self.codec = compression.active(codec)
+        #: injected-failure schedule (``repro.faults.FaultPlan``); stored
+        #: in active form — None/empty plans keep every round bit-for-bit
+        #: the pre-fault program (the contracts baseline pins this, same
+        #: discipline as ``codec="none"``). Active plans make
+        #: ``run_rounds`` fold per-round dropout into the survive mask,
+        #: poison flagged uploads, and run the scatter-back guard, with
+        #: ``dropped``/``rejected_rows`` counters riding the scan's
+        #: metric buffers.
+        self.faults = fault_lib.active(faults)
         local_train = make_local_trainer(net, fl)
         self._vtrain = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))
         self._vtrain_per = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0))
@@ -241,7 +251,7 @@ class DenseEngine:
 
     # -- one round -----------------------------------------------------
     def _round_rows(self, spec, flat_params, key, round_index=0,
-                    codec_state=None):
+                    codec_state=None, fault=None):
         """One protocol round on the packed carry, stopping BEFORE the
         consensus collapse: ``flat_params`` is the flat [sum(sizes)] global
         model, ``spec`` its TreeSpec. The round's federated state stays a
@@ -251,7 +261,18 @@ class DenseEngine:
         flat buffer, and local training vmaps over unpacked views. Returns
         the mixed PER-CLIENT rows ``(flat_mixed [P, sum(sizes)], losses,
         codec_state)`` — the resident reference the sampled window round is
-        pinned against bit-for-bit."""
+        pinned against bit-for-bit.
+
+        ``fault`` (active plans only) is this round's ``(drop [P], flag
+        [P], mode [P])`` triple from ``FaultPlan.dense_arrays``: dropped
+        clients leave the survive mask for every sub-round, flagged
+        clients' FINAL uploads are poisoned on the wire (``corrupt_flat``),
+        detected non-finite rows are excluded from the mix like stragglers
+        (and their bytes sanitized — a masked NaN row would still poison a
+        dense contraction through 0 * nan), and the scatter-back guard
+        reverts any rejected row to its pre-round value. The return then
+        grows a 4th element: ``{'dropped', 'rejected_rows'}`` int32
+        counters. ``fault=None`` traces the exact pre-fault program."""
         proto, fl = self.proto, self.fl
         P = proto.num_participants(fl)
         L = proto.num_clusters(fl)
@@ -260,15 +281,21 @@ class DenseEngine:
         # gathered ONCE per round: the selection is fixed across sub-rounds
         cx, cy, cm, counts = _gather_clients(self.data_dev, sel)
         smask = straggler_mask(k_str, P, fl.straggler_rate)
+        drop_t = flag_t = mode_t = None
+        if fault is not None:
+            drop_t, flag_t, mode_t = fault
+            smask = smask * (1.0 - drop_t)
         flat_old = jnp.broadcast_to(flat_params[None],
                                     (P, flat_params.shape[0]))
 
-        def ctx_for(sub_round: int, sync: bool):
+        def ctx_for(sub_round: int, sync: bool, survive=None):
             return make_context(
                 key=jax.random.fold_in(k_mix, sub_round),
-                round_index=round_index, survive=smask, counts=counts,
-                cluster_ids=cids, num_clusters=L, do_global_sync=sync,
-                topology=self.topology)
+                round_index=round_index,
+                survive=smask if survive is None else survive,
+                counts=counts, cluster_ids=cids, num_clusters=L,
+                do_global_sync=sync, topology=self.topology,
+                fault_drop=drop_t)
 
         flat_cp, losses = None, jnp.zeros(())
         cstate = codec_state
@@ -285,24 +312,47 @@ class DenseEngine:
                 cp, losses = self._vtrain_per(start, cx, cy, cm, keys)
             flat_cp = kernel_ops.pack_tree(cp)[0]
 
-        flat_mixed, cstate = self._mix_flat(flat_cp, flat_old,
-                                            ctx_for(sub_rounds, True), cstate)
-        return flat_mixed, losses, cstate
+        if fault is None:
+            flat_mixed, cstate = self._mix_flat(
+                flat_cp, flat_old, ctx_for(sub_rounds, True), cstate)
+            return flat_mixed, losses, cstate
+        # the fault wire sits on the FINAL upload: poison flagged rows,
+        # then receive-side validation — the finite check plus the
+        # integrity flag (a bit-flipped row stays finite; without the
+        # flag its huge-exponent values would enter the mix average and
+        # contaminate every OTHER row). Detected rows are excluded from
+        # the mix like stragglers and their bytes sanitized so 0 * nan
+        # never reaches the contraction.
+        flat_cp = fault_lib.corrupt_flat(flat_cp, flag_t, mode_t)
+        ok = jnp.all(jnp.isfinite(flat_cp), axis=1) & (flag_t <= 0)
+        flat_cp = jnp.where(ok[:, None], flat_cp, flat_old)
+        flat_mixed, cstate = self._mix_flat(
+            flat_cp, flat_old,
+            ctx_for(sub_rounds, True,
+                    survive=smask * ok.astype(smask.dtype)), cstate)
+        # scatter-back guard: no flagged or non-finite row survives into
+        # the carry — rejected clients keep their pre-round value
+        guarded, bad = fault_lib.guard_flat(flat_mixed, flat_old, flag_t)
+        counters = {"dropped": jnp.sum(drop_t).astype(jnp.int32),
+                    "rejected_rows": jnp.sum(bad).astype(jnp.int32)}
+        return guarded, losses, cstate, counters
 
     def _round_flat(self, spec, flat_params, key, round_index=0,
-                    codec_state=None):
+                    codec_state=None, fault=None):
         """``_round_rows`` + the consensus collapse: the reported global
         model is the mean over the mixed client rows. Returns ``(flat',
-        mean_loss[, codec_state])``."""
-        flat_mixed, losses, cstate = self._round_rows(
-            spec, flat_params, key, round_index, codec_state)
+        mean_loss[, codec_state])``; with ``fault`` the per-round counter
+        dict rides along as the last element."""
+        out = self._round_rows(
+            spec, flat_params, key, round_index, codec_state, fault=fault)
+        flat_mixed, losses, cstate = out[:3]
         # consensus collapse in each LEAF's dtype (mean_packed), exactly as
         # the unpacked program computed it — a whole-buffer mean would
         # accumulate bf16 leaves in the promoted dtype
         new_flat = kernel_ops.mean_packed(flat_mixed, spec)
-        if self.codec is None:
-            return new_flat, jnp.mean(losses)
-        return new_flat, jnp.mean(losses), cstate
+        base = ((new_flat, jnp.mean(losses)) if self.codec is None
+                else (new_flat, jnp.mean(losses), cstate))
+        return base if fault is None else base + (out[3],)
 
     def _round(self, params, key, round_index=0, codec_state=None):
         """One protocol round on pytree params (the jitted ``round_fn``
@@ -341,6 +391,9 @@ class DenseEngine:
                 self._eval,
                 lambda _: (jnp.zeros(()), jnp.zeros(())), p)
 
+        if self.faults is not None:
+            return self._build_run_faulted(spec, T, eval_at)
+
         if self.codec is None:
             def body(carry, t):
                 flat, key = carry
@@ -374,6 +427,61 @@ class DenseEngine:
                 return kernel_ops.unpack_tree(flat, spec), {
                     "train_loss": loss, "acc": acc_w,
                     "acc_client_mean": acc_m}
+
+        return run
+
+    def _build_run_faulted(self, spec, T: int, eval_at):
+        """The faulted T-round program: the plan's dense per-round
+        ``(drop, flag, mode)`` arrays ride the scan as xs alongside the
+        round counter, every round runs the fault-wired ``_round_flat``,
+        and the metric dict grows the four fault counters ([T] int32;
+        ``retries``/``prefetch_fallbacks`` are store-tier counters — zeros
+        here, the resident engine has no store)."""
+        P = self.proto.num_participants(self.fl)
+        drop, flag, mode = self.faults.dense_arrays(T, P)
+        fault_xs = (jnp.asarray(drop), jnp.asarray(flag), jnp.asarray(mode))
+
+        def metric_dict(flat, loss, acc_w, acc_m, dropped, rejected):
+            zero = jnp.zeros((T,), jnp.int32)
+            return kernel_ops.unpack_tree(flat, spec), {
+                "train_loss": loss, "acc": acc_w, "acc_client_mean": acc_m,
+                "dropped": dropped, "rejected_rows": rejected,
+                "retries": zero, "prefetch_fallbacks": zero}
+
+        if self.codec is None:
+            def body(carry, xs):
+                t, drop_t, flag_t, mode_t = xs
+                flat, key = carry
+                key, kr = jax.random.split(key)
+                flat, loss, counters = self._round_flat(
+                    spec, flat, kr, t, fault=(drop_t, flag_t, mode_t))
+                acc_w, acc_m = eval_at(flat, t)
+                return (flat, key), (loss, acc_w, acc_m,
+                                     counters["dropped"],
+                                     counters["rejected_rows"])
+
+            def run(flat, key):
+                (flat, _), ys = jax.lax.scan(
+                    body, (flat, key), (jnp.arange(T),) + fault_xs)
+                return metric_dict(flat, *ys)
+        else:
+            def body(carry, xs):
+                t, drop_t, flag_t, mode_t = xs
+                flat, key, cstate = carry
+                key, kr = jax.random.split(key)
+                flat, loss, cstate, counters = self._round_flat(
+                    spec, flat, kr, t, cstate,
+                    fault=(drop_t, flag_t, mode_t))
+                acc_w, acc_m = eval_at(flat, t)
+                return (flat, key, cstate), (loss, acc_w, acc_m,
+                                             counters["dropped"],
+                                             counters["rejected_rows"])
+
+            def run(flat, key):
+                cstate = self._init_codec_state_flat(flat)
+                (flat, _, _), ys = jax.lax.scan(
+                    body, (flat, key, cstate), (jnp.arange(T),) + fault_xs)
+                return metric_dict(flat, *ys)
 
         return run
 
@@ -481,7 +589,8 @@ class SampledEngine:
     def __init__(self, net: PaperNetConfig, data_dev: Dict, fl: FLConfig,
                  proto: Protocol, topology: Optional[Topology] = None, *,
                  mix_use_pallas: Optional[bool] = None, codec=None,
-                 mix_path: Optional[str] = None, pipeline_depth: int = 1):
+                 mix_path: Optional[str] = None, pipeline_depth: int = 1,
+                 faults=None, prefetch_timeout: Optional[float] = None):
         from repro.protocols.base import (
             get_participation, validate_participation)
         self.net, self.fl, self.proto = net, fl, proto
@@ -490,6 +599,27 @@ class SampledEngine:
         self.mix_use_pallas = mix_use_pallas
         self.mix_path = _check_mix_path(mix_path or fl.mix_path)
         self.codec = compression.active(codec)
+        #: injected-failure schedule (``repro.faults.FaultPlan``, active
+        #: form — None/empty plans keep every round bit-for-bit the
+        #: pre-fault program). Active plans route rounds through the
+        #: fault-wired window program + scatter-back guard, attach a
+        #: ``FaultInjector`` to the store's read/prefetch hooks, and
+        #: cold-retry rejected clients via the requeue splice.
+        self.faults = fault_lib.active(faults)
+        self._injector = (fault_lib.FaultInjector(self.faults)
+                          if self.faults is not None else None)
+        #: clients whose rows the guard rejected, awaiting their cold
+        #: retry: spliced into the tail slots of the next selection
+        self._retry_queue: list = []
+        #: {round -> counter dict} accumulated by the host driver; drained
+        #: into run_rounds' metrics
+        self._fault_log: Dict[int, Dict[str, int]] = {}
+        #: seconds ``_acquire_window`` waits on a prefetch handle before
+        #: falling back to a synchronous gather (None = wait forever,
+        #: though a DEAD worker still raises immediately and falls back);
+        #: default ``fl.prefetch_timeout`` (0 = forever)
+        pt = fl.prefetch_timeout if prefetch_timeout is None else prefetch_timeout
+        self.prefetch_timeout = float(pt) if pt else None
         #: D — enrolled population; K — active window per round
         self.num_enrolled = fl.enrolled
         self.window = validate_participation(fl, proto)
@@ -513,6 +643,12 @@ class SampledEngine:
         #: [, codec_state]) -> (flat_mixed, mean_loss[, codec_state]) —
         #: every operand is [K, sum(sizes)] or smaller; D never enters
         self.window_fn = jax.jit(self._window_round, donate_argnums=donate)
+        #: fault-wired variant (active plans only): extra [K] drop/flag/
+        #: mode operands, returns the rejected-row mask alongside the
+        #: guarded window
+        self.window_fault_fn = (
+            jax.jit(self._window_round_faulted, donate_argnums=donate)
+            if self.faults is not None else None)
         #: max windows in flight in ``run_rounds``: 1 = serial (the
         #: historical round-by-round loop, bit-for-bit), d >= 2 pipelines
         #: prefetch/compute/retire across up to d rounds
@@ -552,10 +688,15 @@ class SampledEngine:
                     f"store width {store.width} does not match the packed "
                     f"model width {flat.shape[-1]}")
             self.store = store
-            return store
-        self.store = store_mod.make_store(
-            flat[0], self.num_enrolled, tier=tier, mesh_info=mesh_info,
-            residual=self._codec_stateful)
+        else:
+            self.store = store_mod.make_store(
+                flat[0], self.num_enrolled, tier=tier, mesh_info=mesh_info,
+                residual=self._codec_stateful,
+                read_retries=self.fl.store_read_retries,
+                read_backoff=self.fl.store_read_backoff)
+        if self._injector is not None:
+            # the store's read/prefetch hooks fire this engine's plan
+            self.store.fault_injector = self._injector
         return self.store
 
     @property
@@ -610,6 +751,139 @@ class SampledEngine:
             return flat_mixed, jnp.mean(losses), cstate
         return flat_mixed, jnp.mean(losses)
 
+    def _window_round_faulted(self, flat_win, active_ids, k_tr, k_str,
+                              k_mix, drop, flag, mode, round_index=0,
+                              codec_state=None):
+        """``_window_round`` with the fault wire spliced in (a SEPARATE
+        traced program — the fault-free ``window_fn`` stays byte-identical
+        to the pre-fault build). ``drop``/``flag``/``mode`` are this
+        round's per-SLOT vectors: dropped slots leave the survive mask for
+        every sub-round; flagged slots' final uploads are poisoned
+        (``corrupt_flat``), detected non-finite rows are excluded from the
+        mix like stragglers (bytes sanitized first — a masked NaN would
+        still poison a dense contraction), and the scatter-back guard
+        reverts every rejected row to its pre-round persistent state.
+        Returns ``(guarded, mean_loss, rejected [K] bool[, codec_state])``
+        — the host driver requeues rejected clients and withholds their
+        staleness touch."""
+        fl, K = self.fl, self.window
+        sel_data = active_ids % self._data_clients
+        cx, cy, cm, counts = _gather_clients(self.data_dev, sel_data)
+        smask = straggler_mask(k_str, K, fl.straggler_rate) * (1.0 - drop)
+        flat_old = flat_win
+
+        def ctx_for(sub_round: int, sync: bool, survive=None):
+            return make_context(
+                key=jax.random.fold_in(k_mix, sub_round),
+                round_index=round_index,
+                survive=smask if survive is None else survive,
+                counts=counts, cluster_ids=jnp.asarray(self._cluster_ids),
+                num_clusters=self._num_clusters, do_global_sync=sync,
+                topology=self.topology, active_ids=active_ids,
+                num_enrolled=self.num_enrolled, fault_drop=drop)
+
+        def mix(flat_new, ctx, cstate):
+            return mix_flat(self.proto, flat_new, flat_old, ctx, cstate,
+                            mix_path=self.mix_path, codec=self.codec,
+                            use_pallas=self.mix_use_pallas)
+
+        flat_cp, losses = None, jnp.zeros(())
+        cstate = codec_state
+        sub_rounds = max(1, fl.sync_period)
+        for r in range(sub_rounds):
+            keys = jax.random.split(jax.random.fold_in(k_tr, r), K)
+            if flat_cp is None:
+                flat_start = flat_win
+            else:
+                flat_start, cstate = mix(flat_cp, ctx_for(r, False), cstate)
+            start = kernel_ops.unpack_tree(flat_start, self._spec)
+            cp, losses = self._vtrain_per(start, cx, cy, cm, keys)
+            flat_cp = kernel_ops.pack_tree(cp)[0]
+
+        # receive-side validation: finite check + integrity flag (a
+        # bit-flipped row stays finite — unflagged it would contaminate
+        # the mix average for every other row); detected rows are
+        # excluded from the mix and sanitized before the contraction
+        flat_cp = fault_lib.corrupt_flat(flat_cp, flag, mode)
+        ok = jnp.all(jnp.isfinite(flat_cp), axis=1) & (flag <= 0)
+        flat_cp = jnp.where(ok[:, None], flat_cp, flat_old)
+        flat_mixed, cstate = mix(
+            flat_cp,
+            ctx_for(sub_rounds, True, survive=smask * ok.astype(smask.dtype)),
+            cstate)
+        guarded, bad = fault_lib.guard_flat(flat_mixed, flat_old, flag)
+        if self._codec_stateful:
+            # a rejected row's residual must not absorb this round's
+            # feedback either — revert it with the row
+            cstate = jnp.where(bad[:, None], codec_state, cstate)
+            return guarded, jnp.mean(losses), bad, cstate
+        return guarded, jnp.mean(losses), bad
+
+    # -- fault-mode host bookkeeping ------------------------------------
+
+    def _log_fault(self, t: int, **kw) -> None:
+        rec = self._fault_log.setdefault(int(t), {
+            "dropped": 0, "rejected_rows": 0, "retries": 0,
+            "prefetch_fallbacks": 0})
+        for k, v in kw.items():
+            rec[k] += int(v)
+
+    def _splice_retries(self, ids_np: np.ndarray):
+        """Cold retry: clients the guard rejected earlier replace the TAIL
+        slots of this selection (skipping ids already selected — being
+        picked again IS the retry). Returns the patched id vector."""
+        if not self._retry_queue:
+            return ids_np
+        ids_np = np.array(ids_np, copy=True)
+        present = {int(c) for c in ids_np}
+        take, rest = [], []
+        for c in self._retry_queue:
+            if int(c) in present:
+                continue                     # selected organically — retried
+            if len(take) < ids_np.shape[0]:
+                take.append(int(c))
+                present.add(int(c))
+            else:
+                rest.append(int(c))
+        self._retry_queue = rest
+        if take:
+            ids_np[-len(take):] = np.asarray(take, ids_np.dtype)
+        return ids_np
+
+    def _fault_vectors(self, spec, ids_np: np.ndarray):
+        """This round's per-slot ``(drop, flag, mode)`` vectors: the
+        ``FaultSpec`` names ENROLLED client ids; ids not in this window
+        simply don't fire."""
+        K = ids_np.shape[0]
+        drop = np.zeros((K,), np.float32)
+        flag = np.zeros((K,), np.float32)
+        mode = np.zeros((K,), np.int32)
+        if spec is not None:
+            pos = {int(c): j for j, c in enumerate(ids_np)}
+            for c in spec.drop:
+                j = pos.get(int(c))
+                if j is not None:
+                    drop[j] = 1.0
+            for c, m in spec.corrupt:
+                j = pos.get(int(c))
+                if j is not None:
+                    flag[j] = 1.0
+                    mode[j] = fault_lib.plan.MODE_CODES[m]
+        return drop, flag, mode
+
+    def _requeue_rejected(self, ids_np: np.ndarray, bad_np: np.ndarray,
+                          drop: np.ndarray, t: int):
+        """Post-guard host bookkeeping shared by the serial and pipelined
+        drivers: requeue rejected clients for their cold retry, log the
+        round's counters, and return the ids whose staleness may advance
+        (accepted AND not injected-dropped)."""
+        for c in ids_np[bad_np]:
+            if int(c) not in self._retry_queue:
+                self._retry_queue.append(int(c))
+        self._log_fault(t, dropped=int(drop.sum()),
+                        rejected_rows=int(bad_np.sum()))
+        return ids_np[(~bad_np) & (drop == 0)]
+
     # -- host driver ----------------------------------------------------
     def round(self, key, round_index: int = 0):
         """One sampled round against the store: select -> gather -> window
@@ -621,6 +895,8 @@ class SampledEngine:
         if self.store is None:
             raise ValueError("SampledEngine.round: call init_store(params) "
                              "first — the engine has no enrolled state")
+        if self.faults is not None:
+            return self._round_faulted(key, round_index)
         k_sel, k_tr, k_str, k_mix = jax.random.split(key, 4)
         active_ids = self.select_fn(k_sel)
         ids_np = np.asarray(active_ids)
@@ -641,6 +917,43 @@ class SampledEngine:
         self.store.touch(ids_np, round_index)
         return loss
 
+    def _round_faulted(self, key, round_index: int):
+        """The serial round under an active plan: arm the injector, splice
+        cold retries into the selection, run the fault-wired window, then
+        scatter the GUARDED rows (a rejected row writes back its pre-round
+        bytes — the store never absorbs a poisoned row) and touch only the
+        accepted ids. Store read retries are metered per round via the
+        cumulative counter's delta."""
+        inj = self._injector
+        inj.begin_round(round_index)
+        spec = self.faults.for_round(round_index)
+        k_sel, k_tr, k_str, k_mix = jax.random.split(key, 4)
+        ids_np = self._splice_retries(np.asarray(self.select_fn(k_sel)))
+        active_ids = jnp.asarray(ids_np)
+        drop, flag, mode = self._fault_vectors(spec, ids_np)
+        r0 = self.store.read_retry_count
+        flat_win = self.store.gather(ids_np)
+        t_idx = jnp.asarray(round_index, jnp.int32)
+        if self._codec_stateful:
+            res = self.store.gather_residual(ids_np)
+            flat_out, loss, bad, res = self.window_fault_fn(
+                flat_win, active_ids, k_tr, k_str, k_mix,
+                jnp.asarray(drop), jnp.asarray(flag), jnp.asarray(mode),
+                t_idx, res)
+            self.store.scatter_residual(ids_np, res)
+        else:
+            flat_out, loss, bad = self.window_fault_fn(
+                flat_win, active_ids, k_tr, k_str, k_mix,
+                jnp.asarray(drop), jnp.asarray(flag), jnp.asarray(mode),
+                t_idx)
+        bad_np = np.asarray(bad).astype(bool)
+        self.store.scatter(ids_np, flat_out)
+        touch_ids = self._requeue_rejected(ids_np, bad_np, drop, round_index)
+        self.store.touch(touch_ids, round_index)
+        self._log_fault(round_index,
+                        retries=self.store.read_retry_count - r0)
+        return loss
+
     # -- the software pipeline (pipeline_depth >= 2) --------------------
 
     def _issue_round(self, key, t: int):
@@ -655,6 +968,26 @@ class SampledEngine:
         k_sel, k_tr, k_str, k_mix = jax.random.split(
             jax.random.fold_in(key, t), 4)
         active_ids = self.select_fn(k_sel)
+        if self.faults is not None:
+            # fault mode: the injector is armed BEFORE the prefetch goes
+            # out (round t's store reads are the ones its spec targets —
+            # round t-1's acquire already completed, so the previous
+            # round's arms cannot be clobbered mid-read), and the retry
+            # splice needs concrete ids — the selection materializes here
+            # rather than on the fetch thread
+            self._injector.begin_round(t)
+            spec = self.faults.for_round(t)
+            ids_np = self._splice_retries(np.asarray(active_ids))
+            active_ids = jnp.asarray(ids_np)
+            return {
+                "t": t, "active_ids": active_ids, "ids_np": ids_np,
+                "keys": (k_tr, k_str, k_mix),
+                "fault": self._fault_vectors(spec, ids_np),
+                "r0": self.store.read_retry_count,
+                "win": self.store.prefetch(active_ids),
+                "res": (self.store.prefetch_residual(active_ids)
+                        if self._codec_stateful else None),
+            }
         return {
             "t": t, "active_ids": active_ids, "ids_np": None,
             "keys": (k_tr, k_str, k_mix),
@@ -695,15 +1028,32 @@ class SampledEngine:
         rows). Both patch from their in-flight outputs; patching a row
         the prefetch DID see post-scatter rewrites it with the same bits,
         so the patch is idempotent and the read race is benign."""
-        cur["ids_np"] = ids_np = np.asarray(cur["active_ids"])
+        if cur["ids_np"] is None:
+            cur["ids_np"] = np.asarray(cur["active_ids"])
+        ids_np = cur["ids_np"]
         sources = shadow + pending
-        flat_win = self._patch_rows(cur["win"].wait(), ids_np, sources,
-                                    "out_flat")
+        flat_win = self._patch_rows(
+            self._prefetch_rows(cur, "win", self.store.gather), ids_np,
+            sources, "out_flat")
         res = None
         if self._codec_stateful:
-            res = self._patch_rows(cur["res"].wait(), ids_np, sources,
-                                   "out_res")
+            res = self._patch_rows(
+                self._prefetch_rows(cur, "res", self.store.gather_residual),
+                ids_np, sources, "out_res")
         return flat_win, res
+
+    def _prefetch_rows(self, cur, field, sync_gather):
+        """Collect one prefetch handle with the engine's timeout; a DEAD
+        worker (its exception re-raises here) or a STUCK one (timeout) is
+        not fatal — the round falls back to a synchronous gather. A
+        permanent store failure (e.g. ``CheckpointCorruptionError``) then
+        raises from the synchronous path, so real errors still surface."""
+        try:
+            return cur[field].result(self.prefetch_timeout)
+        except Exception:
+            if self.faults is not None:
+                self._log_fault(cur["t"], prefetch_fallbacks=1)
+            return sync_gather(cur["ids_np"])
 
     def _retire_round(self, p):
         """Stage C: scatter round p's mixed rows (+ residual) back and
@@ -713,7 +1063,10 @@ class SampledEngine:
         if p["out_res"] is not None:
             self.store.scatter_residual(p["ids_np"], p["out_res"])
         self.store.scatter(p["ids_np"], p["out_flat"])
-        self.store.touch(p["ids_np"], p["t"])
+        # fault mode restricts the staleness touch to accepted ids (the
+        # guard already reverted rejected rows, so the scatter is safe)
+        touch = p.get("touch_ids")
+        self.store.touch(p["ids_np"] if touch is None else touch, p["t"])
 
     def _run_rounds_pipelined(self, key, T: int, depth: int):
         """T rounds with up to ``depth`` windows in flight. Per loop
@@ -733,7 +1086,21 @@ class SampledEngine:
             # scatters (they completed before this point) — drop them
             shadow.clear()
             k_tr, k_str, k_mix = cur["keys"]
-            if self._codec_stateful:
+            bad = None
+            if self.faults is not None:
+                drop, flag, mode = cur["fault"]
+                fxs = (jnp.asarray(drop), jnp.asarray(flag),
+                       jnp.asarray(mode))
+                if self._codec_stateful:
+                    out_flat, loss, bad, out_res = self.window_fault_fn(
+                        flat_win, cur["active_ids"], k_tr, k_str, k_mix,
+                        *fxs, jnp.asarray(t, jnp.int32), res)
+                else:
+                    out_res = None
+                    out_flat, loss, bad = self.window_fault_fn(
+                        flat_win, cur["active_ids"], k_tr, k_str, k_mix,
+                        *fxs, jnp.asarray(t, jnp.int32))
+            elif self._codec_stateful:
                 out_flat, loss, out_res = self.window_fn(
                     flat_win, cur["active_ids"], k_tr, k_str, k_mix,
                     jnp.asarray(t, jnp.int32), res)
@@ -752,6 +1119,16 @@ class SampledEngine:
             cur.update(out_flat=out_flat, out_res=out_res)
             losses[t] = loss
             pending.append(cur)
+            if self.faults is not None:
+                # host-sync the guard verdict BEFORE issuing round t+1 so
+                # the requeue splice sees this round's rejections at every
+                # depth — fault mode trades that slice of overlap for
+                # depth-invariant cold-retry semantics
+                bad_np = np.asarray(bad).astype(bool)
+                cur["touch_ids"] = self._requeue_rejected(
+                    cur["ids_np"], bad_np, cur["fault"][0], t)
+                self._log_fault(
+                    t, retries=self.store.read_retry_count - cur["r0"])
             nxt = self._issue_round(key, t + 1) if t + 1 < T else None
             while len(pending) > depth - 1:
                 p = pending.pop(0)
@@ -767,19 +1144,34 @@ class SampledEngine:
         ``pipeline_depth`` (default: the engine's) overlaps select/prefetch
         and retire/scatter with the compiled window at depth >= 2,
         bit-for-bit identical to the depth-1 serial loop. Returns metrics
-        with the [T] per-round mean train losses."""
+        with the [T] per-round mean train losses; under an active fault
+        plan the dict grows the four per-round counters ``dropped``,
+        ``rejected_rows``, ``retries`` and ``prefetch_fallbacks`` ([T]
+        int64)."""
         if self.store is None:
             raise ValueError("SampledEngine.run_rounds: call "
                              "init_store(params) first")
         depth = self._check_depth(self.pipeline_depth if pipeline_depth
                                   is None else pipeline_depth)
         T = int(T)
+        if self.faults is not None:
+            # one run_rounds call == one chaos run: counters and the cold-
+            # retry queue start clean
+            self._fault_log = {}
+            self._retry_queue = []
         if depth == 1:
             losses = [self.round(jax.random.fold_in(key, t), round_index=t)
                       for t in range(T)]
         else:
             losses = self._run_rounds_pipelined(key, T, depth)
-        return {"train_loss": np.asarray(jax.device_get(losses))}
+        metrics = {"train_loss": np.asarray(jax.device_get(losses))}
+        if self.faults is not None:
+            for name in ("dropped", "rejected_rows", "retries",
+                         "prefetch_fallbacks"):
+                metrics[name] = np.asarray(
+                    [self._fault_log.get(t, {}).get(name, 0)
+                     for t in range(T)], np.int64)
+        return metrics
 
     def global_params(self):
         """Consensus readout: the mean over ALL enrolled rows, unpacked to

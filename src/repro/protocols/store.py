@@ -34,8 +34,13 @@ async/debiasing extensions need lives with the state, not the engine.
 """
 from __future__ import annotations
 
+import atexit
 import os
+import threading
+import time
+import weakref
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutureTimeout
 from typing import Dict, Optional
 
 
@@ -43,21 +48,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.io import load_leaves, save_checkpoint
+from repro.checkpoint.io import (
+    CheckpointCorruptionError, load_leaves, save_checkpoint,
+)
 from repro.kernels import ops as kernel_ops
 
 #: footprint (bytes of [D, sum(sizes)] at f32) above which ``make_store``
 #: refuses to materialize a resident buffer and drops to the cold tier
 MEMORY_TIER_MAX_BYTES = 2 ** 31
 
+#: every live prefetch pool, so interpreter exit can never hang on a
+#: forgotten non-daemon fetch thread (the lifecycle bug this replaces:
+#: a lazily-created ThreadPoolExecutor nobody ever shut down). WeakSet —
+#: registration must not keep collected stores' pools alive.
+_LIVE_FETCH_POOLS: "weakref.WeakSet[ThreadPoolExecutor]" = weakref.WeakSet()
+
+
+@atexit.register
+def _shutdown_fetch_pools() -> None:
+    for pool in list(_LIVE_FETCH_POOLS):
+        pool.shutdown(wait=False, cancel_futures=True)
+
 
 class PrefetchHandle:
     """An in-flight window read issued by ``ClientStateStore.prefetch``.
-    ``wait()`` blocks until the [K, width] rows are available and returns
-    them; calling it twice returns the same rows."""
+    ``result(timeout=)`` blocks until the [K, width] rows are available
+    and returns them (``TimeoutError`` if the fetch is stuck past the
+    timeout; a worker-side exception re-raises here); calling it twice
+    returns the same rows. ``wait()`` is the historical no-timeout alias."""
+
+    def result(self, timeout: Optional[float] = None) -> jnp.ndarray:
+        raise NotImplementedError
 
     def wait(self) -> jnp.ndarray:
-        raise NotImplementedError
+        return self.result()
 
 
 class _ReadyPrefetch(PrefetchHandle):
@@ -67,19 +91,31 @@ class _ReadyPrefetch(PrefetchHandle):
     def __init__(self, rows):
         self._rows = rows
 
-    def wait(self):
+    def result(self, timeout: Optional[float] = None):
         return self._rows
 
 
 class _ThreadPrefetch(PrefetchHandle):
     """Cold tier: the gather runs on a background fetch thread so
-    ``load_leaves`` partial-row file reads overlap the compiled window."""
+    ``load_leaves`` partial-row file reads overlap the compiled window.
+    A worker-side exception re-raises out of ``result()`` — and is marked
+    CONSUMED on the owning store, so the store's rethrow-on-next-use
+    safety net (for callers that never collect the handle) does not
+    raise the same failure twice."""
 
-    def __init__(self, future):
+    def __init__(self, future, owner=None):
         self._future = future
+        self._owner = owner
 
-    def wait(self):
-        return self._future.result()
+    def result(self, timeout: Optional[float] = None):
+        try:
+            return self._future.result(timeout)
+        except (_FutureTimeout, TimeoutError):
+            raise
+        except BaseException as e:
+            if self._owner is not None:
+                self._owner._consume_worker_error(e)
+            raise
 
 
 class ClientStateStore:
@@ -87,6 +123,14 @@ class ClientStateStore:
     staleness. ``gather``/``scatter`` move [K, width] windows; ids are
     concrete host arrays (selection runs OUTSIDE the compiled window
     program — that is the whole point)."""
+
+    #: optional ``repro.faults.FaultInjector`` (fault-injection harness);
+    #: tiers with real failure surfaces (file reads, fetch threads) call
+    #: its hooks. None = no injection — the default on every tier.
+    fault_injector = None
+    #: cumulative count of retried store reads (checkpoint tier only;
+    #: resident tiers never retry — the buffer is device memory)
+    read_retry_count = 0
 
     def __init__(self, num_enrolled: int, width: int):
         if num_enrolled <= 0:
@@ -96,6 +140,10 @@ class ClientStateStore:
         self.width = int(width)
         #: [D] round index each client last trained in; -1 = never touched
         self.last_round = np.full((self.num_enrolled,), -1, np.int32)
+
+    def close(self) -> None:
+        """Release background resources (fetch threads). No-op on tiers
+        without any; safe to call twice."""
 
     # -- window movement ------------------------------------------------
     def gather(self, ids) -> jnp.ndarray:
@@ -252,7 +300,8 @@ class CheckpointStore(ClientStateStore):
     — a K-row gather out of a D=10^6-row file reads K rows, not D."""
 
     def __init__(self, base, num_enrolled: int, *, width: Optional[int] = None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, read_retries: int = 0,
+                 read_backoff: float = 0.0):
         if isinstance(base, (str, os.PathLike)):
             self._base_path: Optional[str] = os.fspath(base)
             self._base_row: Optional[np.ndarray] = None
@@ -279,12 +328,75 @@ class CheckpointStore(ClientStateStore):
         #: run off-thread to overlap the compiled window. One worker —
         #: prefetches are issued one round ahead and must stay ordered.
         self._executor: Optional[ThreadPoolExecutor] = None
+        #: transient-read resilience: a failed base read is retried up to
+        #: ``read_retries`` times with exponential backoff (base seconds
+        #: ``read_backoff``); ``CheckpointCorruptionError`` is permanent
+        #: and never retried. ``read_retry_count`` accumulates across the
+        #: store's lifetime (engines snapshot per-round deltas).
+        self.read_retries = int(read_retries)
+        self.read_backoff = float(read_backoff)
+        self.read_retry_count = 0
+        #: a fetch-worker exception nobody collected via ``result()``:
+        #: recorded by the future's done-callback and re-raised at the
+        #: store's NEXT use instead of being silently lost
+        self._worker_error: Optional[BaseException] = None
+        self._error_lock = threading.Lock()
 
     def _fetch_pool(self) -> ThreadPoolExecutor:
         if self._executor is None:
             self._executor = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="store-prefetch")
+            _LIVE_FETCH_POOLS.add(self._executor)
         return self._executor
+
+    def close(self) -> None:
+        """Shut down the background fetch pool (queued fetches are
+        cancelled, a running one completes). Idempotent; a later
+        ``prefetch`` lazily restarts the pool. Also registered via
+        ``atexit`` so a forgotten store cannot hang interpreter exit."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=True, cancel_futures=True)
+            _LIVE_FETCH_POOLS.discard(self._executor)
+            self._executor = None
+
+    # -- worker-error bookkeeping (rethrow-on-next-use) ----------------
+    def _on_fetch_done(self, future) -> None:
+        if future.cancelled():
+            return
+        exc = future.exception()
+        if exc is not None:
+            with self._error_lock:
+                if self._worker_error is None:
+                    self._worker_error = exc
+
+    def _consume_worker_error(self, exc: BaseException) -> None:
+        with self._error_lock:
+            if self._worker_error is exc:
+                self._worker_error = None
+
+    def _raise_pending_worker_error(self) -> None:
+        with self._error_lock:
+            exc, self._worker_error = self._worker_error, None
+        if exc is not None:
+            raise RuntimeError(
+                "CheckpointStore: a previous prefetch worker died and its "
+                "error was never collected (call PrefetchHandle.result())"
+            ) from exc
+
+    def _submit_fetch(self, fn, ids) -> PrefetchHandle:
+        self._raise_pending_worker_error()
+        future = self._fetch_pool().submit(self._fetch_job, fn, ids)
+        future.add_done_callback(self._on_fetch_done)
+        return _ThreadPrefetch(future, self)
+
+    def _fetch_job(self, fn, ids):
+        """Runs ON the fetch worker: fault hooks first (an injected delay
+        or worker death lands here), then the id materialization + gather."""
+        if self.fault_injector is not None:
+            self.fault_injector.on_prefetch()
+        if isinstance(ids, jax.Array):
+            ids = np.asarray(ids)
+        return fn(ids)
 
     def prefetch(self, ids) -> PrefetchHandle:
         """Background-thread gather: safe against concurrent ``scatter``
@@ -298,25 +410,42 @@ class CheckpointStore(ClientStateStore):
         selection's output): the host materialization then happens on the
         fetch thread too, so an O(D) selection never blocks the caller —
         the whole id->rows chain overlaps the compiled window."""
-        if isinstance(ids, jax.Array):
-            return _ThreadPrefetch(self._fetch_pool().submit(
-                lambda: self.gather(np.asarray(ids))))
-        ids = self._check_ids(ids)
-        return _ThreadPrefetch(self._fetch_pool().submit(self.gather, ids))
+        if not isinstance(ids, jax.Array):
+            ids = self._check_ids(ids)
+        return self._submit_fetch(self.gather, ids)
 
     def prefetch_residual(self, ids) -> PrefetchHandle:
-        if isinstance(ids, jax.Array):
-            return _ThreadPrefetch(self._fetch_pool().submit(
-                lambda: self.gather_residual(np.asarray(ids))))
-        ids = self._check_ids(ids)
-        return _ThreadPrefetch(
-            self._fetch_pool().submit(self.gather_residual, ids))
+        if not isinstance(ids, jax.Array):
+            ids = self._check_ids(ids)
+        return self._submit_fetch(self.gather_residual, ids)
 
     @property
     def num_touched(self) -> int:
         return len(self._overlay)
 
     def _base_rows(self, ids: np.ndarray) -> np.ndarray:
+        """One base read, retried: transient ``OSError``s (a flaky disk, an
+        injected fault) are retried up to ``read_retries`` times with
+        exponential backoff; ``CheckpointCorruptionError`` is permanent
+        (bad bytes — a retry re-reads the same bytes) and raises through
+        immediately."""
+        attempt = 0
+        while True:
+            try:
+                return self._base_rows_once(ids)
+            except CheckpointCorruptionError:
+                raise
+            except OSError:
+                if attempt >= self.read_retries:
+                    raise
+                if self.read_backoff > 0.0:
+                    time.sleep(self.read_backoff * (2 ** attempt))
+                attempt += 1
+                self.read_retry_count += 1
+
+    def _base_rows_once(self, ids: np.ndarray) -> np.ndarray:
+        if self.fault_injector is not None:
+            self.fault_injector.on_read()
         if self._base_row is not None:
             return np.broadcast_to(self._base_row,
                                    (ids.size, self.width)).copy()
@@ -390,7 +519,9 @@ class CheckpointStore(ClientStateStore):
 
 
 def make_store(base_row, num_enrolled: int, *, tier: str = "auto",
-               mesh_info=None, residual: bool = False) -> ClientStateStore:
+               mesh_info=None, residual: bool = False,
+               read_retries: int = 0, read_backoff: float = 0.0
+               ) -> ClientStateStore:
     """Build the right tier for D=``num_enrolled`` clients all starting at
     ``base_row`` ([sum(sizes)], the packed global init): a resident
     ``MemoryStore`` while [D, width] fits ``MEMORY_TIER_MAX_BYTES``, the
@@ -410,4 +541,6 @@ def make_store(base_row, num_enrolled: int, *, tier: str = "auto",
         flat = jnp.broadcast_to(row[None], (int(num_enrolled), row.shape[0]))
         return MemoryStore(jnp.array(flat), mesh_info=mesh_info,
                            residual=residual)
-    return CheckpointStore(np.asarray(row), num_enrolled)
+    return CheckpointStore(np.asarray(row), num_enrolled,
+                           read_retries=read_retries,
+                           read_backoff=read_backoff)

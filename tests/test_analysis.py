@@ -385,9 +385,10 @@ def test_cli_main_inprocess_gates_on_errors(tmp_path):
                "--baseline", "", "--diff-out", ""])
     assert rc == 0
     doc = json.loads(out.read_text())
-    # default --mix-path both: dense AND sparse lowerings, round + run each
-    assert doc["ok"] and len(doc["programs"]) == 4
-    assert len(doc["contracts"]) == 4
+    # default --mix-path both: dense AND sparse lowerings, round + run
+    # each, plus the fault-wired run per lowering (codec "none" only)
+    assert doc["ok"] and len(doc["programs"]) == 6
+    assert len(doc["contracts"]) == 6
 
     class AlwaysBad(rule_base.Rule):
         id = "always-bad"

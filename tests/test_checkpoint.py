@@ -106,3 +106,63 @@ def test_load_leaves_requires_1d_indices(tmp_path):
     path = save_checkpoint(str(tmp_path), 4, _rowy_tree())
     with pytest.raises(ValueError, match="1-D"):
         load_leaves(path, [[0, 1]])
+
+
+# ---- corruption surfaces (fault-tolerance satellite) --------------------
+
+
+def _truncated_leaf_npz(tmp_path, cut=8):
+    """A hand-built STORED npz whose leaf_0 member is ``cut`` bytes short
+    of its npy header's promise — a mid-write crash or bad sector."""
+    import io
+    import json
+    import zipfile
+
+    arr = np.arange(16 * 4, dtype=np.float32).reshape(16, 4)
+    buf = io.BytesIO()
+    np.lib.format.write_array(buf, arr)
+    meta = {"step": 0, "names": ["state"], "dtypes": ["float32"],
+            "metadata": {}}
+    mbuf = io.BytesIO()
+    np.lib.format.write_array(mbuf, np.array(json.dumps(meta)))
+    path = str(tmp_path / "step_00000000.npz")
+    with zipfile.ZipFile(path, "w", zipfile.ZIP_STORED) as zf:
+        zf.writestr("__meta__.npy", mbuf.getvalue())
+        zf.writestr("leaf_0.npy", buf.getvalue()[:-cut])
+    return path
+
+
+def test_load_leaves_truncated_file_names_path(tmp_path):
+    from repro.checkpoint import CheckpointCorruptionError
+    path = save_checkpoint(str(tmp_path), 0, _tree())
+    with open(path, "r+b") as fh:
+        fh.truncate(100)                       # destroy the zip directory
+    with pytest.raises(CheckpointCorruptionError,
+                       match="corrupt or truncated") as ei:
+        load_leaves(path, [0])
+    assert path in str(ei.value)
+
+
+def test_load_leaves_truncated_leaf_names_row_range(tmp_path):
+    from repro.checkpoint import CheckpointCorruptionError
+    path = _truncated_leaf_npz(tmp_path)
+    # early rows are intact — partial reads before the damage still work
+    leaves, _ = load_leaves(path, [0, 3])
+    np.testing.assert_array_equal(leaves[0][1], np.arange(12, 16))
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        load_leaves(path, [2, 15])
+    msg = str(ei.value)
+    assert path in msg and "truncated" in msg
+    assert "row 15" in msg and "2..15" in msg  # offending row + range
+
+
+def test_corruption_is_not_retried(tmp_path):
+    """Retry-with-backoff is for TRANSIENT errors; corrupt bytes re-read
+    as the same corrupt bytes, so the store must raise immediately."""
+    from repro.checkpoint import CheckpointCorruptionError
+    from repro.protocols import CheckpointStore
+    st = CheckpointStore(_truncated_leaf_npz(tmp_path), 16,
+                         read_retries=5, read_backoff=10.0)
+    with pytest.raises(CheckpointCorruptionError):
+        st.gather(np.array([15], np.int32))
+    assert st.read_retry_count == 0            # no backoff sleeps burned

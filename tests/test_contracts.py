@@ -361,9 +361,14 @@ def test_checked_in_baseline_covers_full_matrix():
                 assert f"dense/{proto}/{mp}/{codec}/round" in contracts
                 assert f"sampled/{proto}/{mp}/{codec}/round" in contracts
             assert f"mesh/{proto}/psum/{codec}/round" in contracts
+        # the fault-wired programs ride the baseline too (codec "none"
+        # only), keeping the DISABLED path's entries byte-identical
+        for mp in ("dense", "sparse"):
+            assert f"dense/{proto}/{mp}/none/faulty-run3" in contracts
+            assert f"sampled/{proto}/{mp}/none/faulty-round" in contracts
     for kind in ("gather", "scatter"):
         assert f"store/memory/dev/none/{kind}" in contracts
-    assert len(contracts) == 82
+    assert len(contracts) == 102
     # every mesh contract's static payload equals its analytic pricing —
     # the parity acceptance criterion, re-checked from the artifact
     for name, c in contracts.items():
@@ -418,7 +423,7 @@ def test_cli_subprocess_full_matrix_matches_baseline(tmp_path):
         capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     doc = json.loads(out.read_text())
-    assert doc["ok"] and len(doc["contracts"]) == 82
+    assert doc["ok"] and len(doc["contracts"]) == 102
     assert doc["contract_diff"]["ok"]
-    assert doc["contract_diff"]["compared"] == 82
+    assert doc["contract_diff"]["compared"] == 102
     assert "No contract regressions" in diff.read_text()

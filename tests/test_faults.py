@@ -1,0 +1,375 @@
+"""Fault-injection harness + failure-tolerant rounds (``repro.faults``).
+
+The robustness bar: a deterministic ``FaultPlan`` (dropout, corrupted
+uploads in all three modes, transient read errors, prefetch-worker
+death) drives both engines through injected failures and (a) the store
+NEVER absorbs a poisoned row, (b) rejected clients get their cold retry
+via the requeue splice, (c) the per-round counters ride the metrics, and
+(d) the faulted sampled driver stays depth- and tier-invariant on
+everything deterministic (losses, dropped, rejected, staleness). With
+``faults=None`` the engines run the exact pre-fault programs — the
+contracts baseline pins the traced side; here we pin the metrics side.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults as fault_lib
+from repro.config import FLConfig
+from repro.configs.paper_models import LOGREG_SYN
+from repro.core.simulator import Simulator
+from repro.data.federated import pack_clients
+from repro.data.synthetic import syncov
+from repro.faults import (
+    CORRUPT_MODES, FaultPlan, FaultSpec, InjectedReadError, active,
+    corrupt_flat, corrupt_rows_np, guard_flat, make_plan,
+)
+from repro.protocols import get
+from repro.protocols.engine import DenseEngine, SampledEngine
+from repro.protocols.store import CheckpointStore, MemoryStore
+
+D = 24
+K = 8
+
+COUNTERS = ("dropped", "rejected_rows", "retries", "prefetch_fallbacks")
+
+
+def _fl(**kw):
+    base = dict(num_clients=D, num_clusters=2, devices_per_cluster=8,
+                participation=D, local_epochs=1, batch_size=10, lr=0.05,
+                straggler_rate=0.3, num_enrolled=D,
+                participants_per_round=K)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data_dev():
+    xs, ys = syncov(num_clients=D, seed=0)
+    data = pack_clients(xs, ys, 10, seed=0)
+    return Simulator(LOGREG_SYN, data, _fl()).data_dev
+
+
+def _engine(data_dev, *, faults=None, depth=1, tier="memory", algo="fedavg",
+            codec=None, select=None, fl=None, seed=0):
+    se = SampledEngine(LOGREG_SYN, data_dev, fl or _fl(), get(algo),
+                       codec=codec, pipeline_depth=depth, faults=faults)
+    se.init_store(se.init_params(seed), tier=tier)
+    if select is not None:
+        se.select_fn = select
+    return se
+
+
+def _store_rows(se):
+    flat = se.store.resident_flat()
+    if flat is not None:
+        return np.asarray(flat)
+    return np.asarray(se.store.gather(np.arange(D, dtype=np.int32)))
+
+
+# ---- plan layer -----------------------------------------------------------
+
+
+def test_make_plan_is_deterministic():
+    kw = dict(drop_rate=0.2, corrupt_rate=0.2, read_error_rate=0.5,
+              kill_prefetch_rounds=(1,))
+    a = make_plan(D, 5, seed=3, **kw)
+    b = make_plan(D, 5, seed=3, **kw)
+    assert a == b and hash(a) == hash(b)
+    assert a != make_plan(D, 5, seed=4, **kw)
+
+
+def test_make_plan_validates_rates():
+    with pytest.raises(ValueError, match="drop_rate"):
+        make_plan(D, 3, drop_rate=1.5)
+    with pytest.raises(ValueError, match="read_error_rate"):
+        make_plan(D, 3, read_error_rate=-0.1)
+
+
+def test_spec_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown corrupt mode"):
+        FaultSpec(0, corrupt=((1, "cosmic_ray"),))
+
+
+def test_active_normalization():
+    assert active(None) is None
+    assert active(FaultPlan()) is None                       # nothing to do
+    assert active(FaultPlan(specs=(FaultSpec(0),))) is None  # all-empty spec
+    plan = FaultPlan(specs=(FaultSpec(0, drop=(1,)),))
+    assert active(plan) is plan
+    with pytest.raises(TypeError, match="FaultPlan"):
+        active({"drop": 1})
+
+
+def test_for_round_and_dense_arrays():
+    plan = FaultPlan(specs=(
+        FaultSpec(1, drop=(0, 99), corrupt=((2, "bitflip"),)),))
+    assert plan.for_round(0) is None
+    assert plan.for_round(1).drop == (0, 99)
+    drop, flag, mode = plan.dense_arrays(3, 4)
+    assert drop.shape == flag.shape == (3, 4) and mode.shape == (3, 4)
+    assert drop[1, 0] == 1.0 and drop.sum() == 1.0   # id 99 >= P ignored
+    assert flag[1, 2] == 1.0
+    assert mode[1, 2] == fault_lib.plan.MODE_CODES["bitflip"]
+
+
+# ---- traced poison + guard ------------------------------------------------
+
+
+def test_corrupt_flat_modes_and_host_mirror():
+    # values in [0.5, 1): the exponent-bit flip lands on a HUGE but
+    # still-finite number (the mode's whole point — isfinite can't see it)
+    rows = np.linspace(0.5, 0.95, 12, dtype=np.float32).reshape(4, 3)
+    flag = jnp.asarray([0.0, 1.0, 1.0, 1.0])
+    mode = jnp.asarray(
+        [0, fault_lib.plan.MODE_CODES["nan"],
+         fault_lib.plan.MODE_CODES["inf"],
+         fault_lib.plan.MODE_CODES["bitflip"]], jnp.int32)
+    out = np.asarray(corrupt_flat(jnp.asarray(rows), flag, mode))
+    np.testing.assert_array_equal(out[0], rows[0])   # unflagged untouched
+    assert np.all(np.isnan(out[1]))
+    assert np.all(np.isinf(out[2]))
+    # bitflip stays FINITE but wrong — only the flag can catch it
+    assert np.all(np.isfinite(out[3])) and not np.any(out[3] == rows[3])
+    mirror = corrupt_rows_np(rows, [(1, "nan"), (2, "inf"), (3, "bitflip")])
+    np.testing.assert_array_equal(out[3], mirror[3])
+    with pytest.raises(TypeError, match="float32"):
+        corrupt_flat(jnp.zeros((2, 3), jnp.int32), flag[:2], mode[:2])
+
+
+def test_guard_flat_rejects_nonfinite_and_flagged():
+    old = np.ones((4, 3), np.float32)
+    new = np.full((4, 3), 2.0, np.float32)
+    new[1, 0] = np.nan
+    new[2, 2] = np.inf
+    flag = jnp.asarray([0.0, 0.0, 0.0, 1.0])   # row 3 finite but flagged
+    guarded, bad = guard_flat(jnp.asarray(new), jnp.asarray(old), flag)
+    np.testing.assert_array_equal(np.asarray(bad),
+                                  [False, True, True, True])
+    guarded = np.asarray(guarded)
+    np.testing.assert_array_equal(guarded[0], new[0])
+    for r in (1, 2, 3):
+        np.testing.assert_array_equal(guarded[r], old[r])
+
+
+# ---- injector + store-tier recovery ---------------------------------------
+
+
+def test_injector_read_budget_fires_at_most_once_each():
+    plan = FaultPlan(specs=(FaultSpec(0, read_errors=2),))
+    inj = fault_lib.FaultInjector(plan)
+    inj.begin_round(0)
+    for _ in range(2):
+        with pytest.raises(InjectedReadError):
+            inj.on_read()
+    inj.on_read()                                   # budget consumed
+    assert inj.counters["read_errors"] == 2
+    inj.begin_round(1)                              # fault-free round
+    inj.on_read()
+
+
+def test_checkpoint_read_retry_absorbs_injected_errors():
+    st = CheckpointStore(np.zeros((4,), np.float32), 16,
+                         read_retries=3, read_backoff=0.0)
+    st.fault_injector = inj = fault_lib.FaultInjector(
+        FaultPlan(specs=(FaultSpec(0, read_errors=2),)))
+    inj.begin_round(0)
+    rows = np.asarray(st.gather(np.array([1, 2], np.int32)))
+    assert rows.shape == (2, 4)
+    assert st.read_retry_count == 2
+
+
+def test_checkpoint_read_error_raises_without_retries():
+    st = CheckpointStore(np.zeros((4,), np.float32), 16)   # read_retries=0
+    st.fault_injector = inj = fault_lib.FaultInjector(
+        FaultPlan(specs=(FaultSpec(0, read_errors=1),)))
+    inj.begin_round(0)
+    with pytest.raises(InjectedReadError):
+        st.gather(np.array([1], np.int32))
+
+
+# ---- engine end-to-end: guard, requeue, counters --------------------------
+
+
+def _nan_all_plan(rounds=3):
+    """Round 0 corrupts EVERY enrolled client — whatever window is drawn,
+    all K rows come back poisoned."""
+    return FaultPlan(specs=(
+        FaultSpec(0, corrupt=tuple((c, "nan") for c in range(D))),))
+
+
+@pytest.mark.parametrize("tier", ["memory", "checkpoint"])
+def test_guard_keeps_poison_out_of_store_and_requeues(data_dev, tier):
+    se = _engine(data_dev, faults=_nan_all_plan(), tier=tier)
+    before = _store_rows(se).copy()
+    se.round(jax.random.PRNGKey(0), 0)
+    after = _store_rows(se)
+    assert np.all(np.isfinite(after))
+    # every window row was rejected: the store kept its pre-round bytes
+    np.testing.assert_array_equal(after, before)
+    assert len(se._retry_queue) == K
+    # staleness never advanced for rejected rows
+    assert np.all(se.store.last_round == -1)
+    # the cold retry: round 1 is fault-free, so the spliced-in clients
+    # train and their rows move
+    se.round(jax.random.PRNGKey(1), 1)
+    assert not se._retry_queue
+    assert np.any(_store_rows(se) != before)
+
+
+def test_retry_splice_replaces_tail_slots(data_dev):
+    se = _engine(data_dev, faults=_nan_all_plan())
+    se._retry_queue = [20, 21, 22]
+    ids = np.arange(K, dtype=np.int32)            # none already selected
+    out = se._splice_retries(ids)
+    np.testing.assert_array_equal(out[:K - 3], np.arange(K - 3))
+    np.testing.assert_array_equal(np.sort(out[-3:]), [20, 21, 22])
+    assert se._retry_queue == []
+    # already-selected ids ride organically, not spliced twice
+    se._retry_queue = [0, 21]
+    out = se._splice_retries(np.arange(K, dtype=np.int32))
+    assert list(out).count(0) == 1 and 21 in out
+
+
+def test_faulted_metrics_carry_counters(data_dev):
+    plan = make_plan(D, 4, seed=1, drop_rate=0.3, corrupt_rate=0.3,
+                     read_error_rate=1.0)
+    se = _engine(data_dev, faults=plan, tier="checkpoint",
+                 fl=_fl(store_read_retries=3))
+    out = se.run_rounds(jax.random.PRNGKey(2), 4)
+    for name in COUNTERS:
+        assert out[name].shape == (4,) and out[name].dtype == np.int64
+    assert out["dropped"].sum() > 0
+    assert out["rejected_rows"].sum() > 0
+    assert out["retries"].sum() > 0                # injected reads recovered
+    assert np.all(np.isfinite(_store_rows(se)))
+
+
+def test_faults_none_metrics_are_the_pre_fault_dict(data_dev):
+    ref = _engine(data_dev)
+    out_ref = ref.run_rounds(jax.random.PRNGKey(4), 3)
+    se = _engine(data_dev, faults=FaultPlan())     # empty == disabled
+    out = se.run_rounds(jax.random.PRNGKey(4), 3)
+    assert set(out) == set(out_ref) == {"train_loss"}
+    np.testing.assert_array_equal(out["train_loss"], out_ref["train_loss"])
+
+
+# ---- depth/tier invariance under faults -----------------------------------
+
+
+def _chaos_plan(rounds=6):
+    return make_plan(D, rounds, seed=5, drop_rate=0.2, corrupt_rate=0.2,
+                     read_error_rate=1.0, kill_prefetch_rounds=(2,))
+
+
+@pytest.mark.parametrize("depth", [2, 3])
+@pytest.mark.parametrize("tier", ["memory", "checkpoint"])
+def test_faulted_pipeline_matches_serial(data_dev, depth, tier):
+    """Deterministic outcomes — losses, dropped, rejected_rows, store
+    bytes, staleness — are identical at every pipeline depth on both
+    tiers. ``retries``/``prefetch_fallbacks`` count actual I/O events and
+    legitimately differ with depth on the cold tier (pipelined prefetch
+    reads pre-scatter rows, so different rows are cold)."""
+    key = jax.random.PRNGKey(6)
+    fl = _fl(store_read_retries=3)
+    ref = _engine(data_dev, faults=_chaos_plan(), depth=1, tier=tier, fl=fl)
+    out_ref = ref.run_rounds(key, 6)
+    se = _engine(data_dev, faults=_chaos_plan(), depth=depth, tier=tier,
+                 fl=fl)
+    out = se.run_rounds(key, 6)
+    np.testing.assert_array_equal(out["train_loss"], out_ref["train_loss"])
+    np.testing.assert_array_equal(out["dropped"], out_ref["dropped"])
+    np.testing.assert_array_equal(out["rejected_rows"],
+                                  out_ref["rejected_rows"])
+    np.testing.assert_array_equal(_store_rows(se), _store_rows(ref))
+    np.testing.assert_array_equal(se.store.last_round, ref.store.last_round)
+
+
+def test_worker_kill_falls_back_to_sync_gather(data_dev):
+    plan = FaultPlan(specs=(FaultSpec(1, kill_prefetch=True),))
+    se = _engine(data_dev, faults=plan, depth=2, tier="checkpoint")
+    out = se.run_rounds(jax.random.PRNGKey(7), 4)
+    assert out["prefetch_fallbacks"].sum() >= 1
+    assert np.all(np.isfinite(out["train_loss"]))
+
+
+def test_stuck_worker_times_out_into_sync_gather(data_dev):
+    """A stalled (not dead) prefetch worker: ``prefetch_timeout`` bounds
+    the wait and the round proceeds through the synchronous gather."""
+    plan = FaultPlan(specs=(FaultSpec(1, prefetch_delay=1.5),))
+    se = _engine(data_dev, faults=plan, depth=2, tier="checkpoint",
+                 fl=_fl(prefetch_timeout=0.05))
+    assert se.prefetch_timeout == 0.05
+    out = se.run_rounds(jax.random.PRNGKey(7), 4)
+    assert out["prefetch_fallbacks"].sum() >= 1
+    assert se._injector.counters["delays"] == 1
+    assert np.all(np.isfinite(out["train_loss"]))
+
+
+def test_faulted_stateful_codec_round(data_dev):
+    """The residual tier rides the guard too: a rejected row reverts its
+    codec residual alongside its params."""
+    se = _engine(data_dev, faults=_nan_all_plan(), algo="fedavg",
+                 codec="topk")
+    res_before = np.asarray(
+        se.store.gather_residual(np.arange(D, dtype=np.int32)))
+    se.round(jax.random.PRNGKey(8), 0)
+    res_after = np.asarray(
+        se.store.gather_residual(np.arange(D, dtype=np.int32)))
+    np.testing.assert_array_equal(res_after, res_before)
+    assert np.all(np.isfinite(_store_rows(se)))
+
+
+# ---- the all-dropped edge (satellite) -------------------------------------
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+@pytest.mark.parametrize("tier", ["memory", "checkpoint"])
+def test_all_stragglers_whole_run_survives(data_dev, depth, tier):
+    """``straggler_rate=1.0``: every client of every round straggles, so
+    no update survives the mix — the run must complete with finite losses
+    and the store must keep exactly its enrollment bytes."""
+    fl = _fl(straggler_rate=1.0)
+    se = _engine(data_dev, depth=depth, tier=tier, fl=fl)
+    before = _store_rows(se).copy()
+    out = se.run_rounds(jax.random.PRNGKey(9), 3)
+    assert np.all(np.isfinite(out["train_loss"]))
+    np.testing.assert_array_equal(_store_rows(se), before)
+
+
+# ---- dense engine + Simulator ---------------------------------------------
+
+
+def test_dense_faulted_run_counters_and_finiteness(data_dev):
+    plan = FaultPlan(specs=(
+        FaultSpec(0, drop=(1,), corrupt=((2, "nan"), (3, "bitflip"))),
+        FaultSpec(2, corrupt=((0, "inf"),)),))
+    fl = _fl()
+    eng = DenseEngine(LOGREG_SYN, data_dev, fl, get("fedavg"), faults=plan)
+    params = eng.init_params(0)
+    out_params, metrics = eng.run_rounds(params, jax.random.PRNGKey(0), 3)
+    assert metrics["dropped"].tolist() == [1, 0, 0]
+    assert metrics["rejected_rows"].tolist() == [2, 0, 1]
+    assert all(np.all(np.isfinite(np.asarray(p)))
+               for p in jax.tree.leaves(out_params))
+    # disabled plan: the metrics dict has NO counter keys
+    clean = DenseEngine(LOGREG_SYN, data_dev, fl, get("fedavg"))
+    _, m2 = clean.run_rounds(params, jax.random.PRNGKey(0), 3)
+    assert not any(k in m2 for k in COUNTERS)
+
+
+def test_simulator_history_carries_fault_counters():
+    xs, ys = syncov(num_clients=D, seed=0)
+    data = pack_clients(xs, ys, 10, seed=0)
+    plan = FaultPlan(specs=(FaultSpec(1, drop=(0,), corrupt=((2, "inf"),)),))
+    sim = Simulator(LOGREG_SYN, data, _fl(), faults=plan)
+    hist = sim.run(rounds=3, algorithm="fedavg", seed=0)
+    assert hist.dropped == [0, 1, 0]
+    assert hist.rejected_rows == [0, 1, 0]
+    assert len(hist.retries) == len(hist.prefetch_fallbacks) == 3
+    clean = Simulator(LOGREG_SYN, data, _fl()).run(rounds=3,
+                                                  algorithm="fedavg", seed=0)
+    assert clean.dropped == [] and clean.rejected_rows == []
+    # faults only ever degrade bookkeeping, not the metric layout
+    assert len(clean.train_loss) == len(hist.train_loss) == 3

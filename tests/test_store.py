@@ -180,3 +180,70 @@ def test_make_store_residual_counts_toward_footprint():
     assert isinstance(
         make_store(jnp.zeros((W,), jnp.float32), d, residual=True),
         CheckpointStore)
+
+
+# ---- prefetch-worker lifecycle (fault-tolerance satellite) --------------
+
+
+def _poll(pred, timeout=5.0):
+    import time
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def test_worker_error_collected_via_result_is_not_rethrown():
+    st = CheckpointStore(np.zeros((W,), np.float32), D)
+
+    def boom(ids):
+        raise ValueError("fetch exploded")
+
+    st.gather = boom
+    h = st.prefetch(np.array([1], np.int32))
+    with pytest.raises(ValueError, match="fetch exploded"):
+        h.result()
+    # collecting consumed the error: the store is healthy again
+    del st.gather
+    np.testing.assert_array_equal(
+        np.asarray(st.prefetch(np.array([2], np.int32)).result()),
+        np.zeros((1, W), np.float32))
+
+
+def test_uncollected_worker_error_rethrows_on_next_use():
+    """A prefetch whose handle is dropped must NOT lose its exception —
+    the store re-raises it at the next submit instead of silently
+    serving stale data forever."""
+    st = CheckpointStore(np.zeros((W,), np.float32), D)
+
+    def boom(ids):
+        raise ValueError("lost in the worker")
+
+    st.gather = boom
+    st.prefetch(np.array([0], np.int32))          # handle dropped
+    assert _poll(lambda: st._worker_error is not None)
+    del st.gather
+    with pytest.raises(RuntimeError, match="never collected"):
+        st.prefetch(np.array([1], np.int32))
+    # the rethrow drained it: the store recovers
+    h = st.prefetch(np.array([1], np.int32))
+    assert np.asarray(h.result()).shape == (1, W)
+
+
+def test_close_is_idempotent_and_pool_restarts_lazily():
+    from repro.protocols.store import _LIVE_FETCH_POOLS
+    st = CheckpointStore(np.zeros((W,), np.float32), D)
+    st.prefetch(np.array([0], np.int32)).result()
+    pool = st._executor
+    assert pool in _LIVE_FETCH_POOLS             # atexit shutdown covers it
+    st.close()
+    assert st._executor is None and pool not in _LIVE_FETCH_POOLS
+    st.close()                                   # idempotent
+    # a later prefetch lazily restarts the pool
+    rows = st.prefetch(np.array([3], np.int32)).result()
+    np.testing.assert_array_equal(np.asarray(rows),
+                                  np.zeros((1, W), np.float32))
+    assert st._executor is not None
+    st.close()
